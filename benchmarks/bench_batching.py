@@ -1,0 +1,87 @@
+"""Paper Figs 14-15: batching impact on ACA + dense matvec.
+
+Fig 15 (impact): batched (one vmapped call over all equal-size blocks) vs
+unbatched (one call per block — the paper's 'loop over all arrays b_i').
+Fig 14 (size sweep): split the block set into groups of g blocks per call
+(the bs_ACA / bs_dense batching-size analogue) and time vs g.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_cluster_tree, build_block_tree, halton
+from repro.core.aca import batched_aca
+from repro.core.geometry import gaussian_kernel
+from repro.core.hmatrix import _gather_cluster_points
+
+from .common import emit, timeit
+
+
+def _leaf_blocks(n, d, c_leaf):
+    tree = build_cluster_tree(halton(n, d), c_leaf=c_leaf)
+    plan = build_block_tree(tree, eta=1.5)
+    lvl = max(plan.aca_levels)                 # finest admissible level
+    blocks = plan.aca_levels[lvl]
+    rp = _gather_cluster_points(tree, lvl, blocks[:, 0])
+    cp = _gather_cluster_points(tree, lvl, blocks[:, 1])
+    dense = plan.dense_blocks
+    dr = _gather_cluster_points(tree, tree.n_levels, dense[:, 0])
+    dc = _gather_cluster_points(tree, tree.n_levels, dense[:, 1])
+    return rp, cp, dr, dc
+
+
+def run(n: int = 16384, c_leaf: int = 128, k: int = 16):
+    rng = np.random.RandomState(0)
+    rp, cp, dr, dc = _leaf_blocks(n, 2, c_leaf)
+    nb = rp.shape[0]
+    x = jnp.asarray(rng.randn(dr.shape[0], c_leaf).astype(np.float32))
+
+    # ---- Fig 15: batched vs unbatched ACA --------------------------------
+    batched = jax.jit(lambda r, c: batched_aca(r, c, gaussian_kernel, k))
+    t_b = timeit(batched, rp, cp)
+    single = jax.jit(lambda r, c: batched_aca(r[None], c[None], gaussian_kernel, k))
+
+    def loop_aca(rp, cp):
+        outs = [single(rp[i], cp[i]) for i in range(nb)]
+        return outs[-1]
+
+    t_u = timeit(loop_aca, rp, cp, warmup=1, iters=2)
+    emit("fig15_aca_batched", t_b, f"blocks={nb}")
+    emit("fig15_aca_unbatched", t_u, f"blocks={nb};speedup_x{t_u / t_b:.1f}")
+
+    # ---- Fig 15: batched vs unbatched dense matvec -----------------------
+    dense_b = jax.jit(lambda r, c, x: jnp.einsum(
+        "bij,bj->bi", gaussian_kernel(r, c), x))
+    t_db = timeit(dense_b, dr, dc, x)
+    dense_1 = jax.jit(lambda r, c, x: gaussian_kernel(r, c) @ x)
+
+    def loop_dense(dr, dc, x):
+        outs = [dense_1(dr[i], dc[i], x[i]) for i in range(dr.shape[0])]
+        return outs[-1]
+
+    t_du = timeit(loop_dense, dr, dc, x, warmup=1, iters=2)
+    emit("fig15_dense_batched", t_db, f"blocks={dr.shape[0]}")
+    emit("fig15_dense_unbatched", t_du,
+         f"blocks={dr.shape[0]};speedup_x{t_du / t_db:.1f}")
+
+    # ---- Fig 14: batching-size sweep (groups of g blocks per call) -------
+    for g in (1, 4, 16, 64, nb):
+        g = min(g, nb)
+        groups = nb // g
+
+        def grouped(rp, cp):
+            out = None
+            for i in range(groups):
+                out = batched(rp[i * g:(i + 1) * g], cp[i * g:(i + 1) * g])
+            return out
+
+        t_g = timeit(grouped, rp, cp, warmup=1, iters=2)
+        bs_bytes = g * c_leaf * k * 4
+        emit(f"fig14_aca_groupsize_{g}", t_g,
+             f"groups={groups};bs_aca_bytes={bs_bytes}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Paper Figs 12-13: O(N log N) runtime scaling of the three phases.
+
+Fig 12-left : spatial data structure (Morton encode + sort)
+Fig 12-right: block cluster tree construction/traversal
+Fig 13      : H-matrix-vector product, NP (recompute) and P (precomputed)
+
+Reports seconds per phase for growing N and the fitted exponent of
+t ~ (N log N)^alpha — alpha ~= 1 reproduces the paper's complexity claim.
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_cluster_tree, build_block_tree, build_hmatrix, halton, make_matvec
+from repro.core.morton import morton_sort
+
+from .common import emit, timeit
+
+
+def _fit_alpha(ns, ts):
+    xs = np.log([n * math.log2(n) for n in ns])
+    ys = np.log(ts)
+    return float(np.polyfit(xs, ys, 1)[0])
+
+
+def run(ns=(2048, 4096, 8192, 16384, 32768), c_leaf: int = 256):
+    rng = np.random.RandomState(0)
+    for d in (2, 3):
+        t_sort, t_tree, t_mv_np, t_mv_p = [], [], [], []
+        for n in ns:
+            pts = halton(n, d)
+            t = timeit(lambda p: morton_sort(p)[0], pts)
+            t_sort.append(t)
+            emit(f"fig12_spatial_d{d}_n{n}", t, f"N={n}")
+
+            t0 = time.perf_counter()
+            tree = build_cluster_tree(pts, c_leaf=c_leaf)
+            plan = build_block_tree(tree, eta=1.5)
+            t = time.perf_counter() - t0
+            t_tree.append(t)
+            emit(f"fig12_blocktree_d{d}_n{n}", t,
+                 f"N={n};aca={plan.num_aca_blocks};dense={plan.num_dense_blocks}")
+
+            x = jnp.asarray(rng.randn(n).astype(np.float32))
+            hm = build_hmatrix(pts, "gaussian", k=16, c_leaf=c_leaf)
+            mv = make_matvec(hm)
+            t = timeit(mv, x)
+            t_mv_np.append(t)
+            emit(f"fig13_matvec_NP_d{d}_n{n}", t, f"N={n}")
+
+            hm_p = build_hmatrix(pts, "gaussian", k=16, c_leaf=c_leaf,
+                                 precompute=True)
+            mv_p = make_matvec(hm_p)
+            t = timeit(mv_p, x)
+            t_mv_p.append(t)
+            emit(f"fig13_matvec_P_d{d}_n{n}", t, f"N={n}")
+
+        emit(f"fig12_spatial_d{d}_alpha", 0.0,
+             f"alpha={_fit_alpha(ns, t_sort):.2f}")
+        emit(f"fig13_matvec_NP_d{d}_alpha", 0.0,
+             f"alpha={_fit_alpha(ns, t_mv_np):.2f}")
+        emit(f"fig13_matvec_P_d{d}_alpha", 0.0,
+             f"alpha={_fit_alpha(ns, t_mv_p):.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Roofline table generator: reads results/dryrun/*.json -> markdown + CSV.
+
+Emits one row per (arch, shape, mesh) with the three terms, dominant
+bottleneck, MODEL_FLOPS ratio and the roofline fraction; writes
+results/roofline_table.md for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_records(tag: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag is not None and r.get("tag", "") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def _fmt_row(r):
+    if r.get("skipped"):
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"skip | — | — | {r['reason'][:60]} |")
+    if "error" in r:
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+                f"ERROR | — | — | {r['error'][:60]} |")
+    rf = r["roofline"]
+    ideal = r.get("ideal", {}).get("bound_s", 0.0)
+    return ("| {arch} | {shape} | {mesh} | {c:.2e} | {m:.2e} | {x:.2e} | "
+            "{i:.2e} | {dom} | {ratio:.2f} | {frac:.3f} | |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        c=rf["compute_s"], m=rf["memory_s"], x=rf["collective_s"], i=ideal,
+        dom=rf["dominant"], ratio=rf["useful_flops_ratio"],
+        frac=rf["roofline_fraction"])
+
+
+def run(tag: str | None = ""):
+    recs = load_records(tag=tag)
+    lines = [
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| ideal bound (s) | dominant | 6ND/HLO | roofline frac | note |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        lines.append(_fmt_row(r))
+        if not r.get("skipped") and "error" not in r:
+            rf = r["roofline"]
+            emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+                 rf["step_time_s"],
+                 f"dom={rf['dominant']};frac={rf['roofline_fraction']:.3f}")
+    out = os.path.join(RESULTS, "..", "roofline_table.md")
+    with open(out, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"# wrote {os.path.abspath(out)} ({len(recs)} records)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  CPU-sized problem sizes
+(the paper's N=2^20+ runs need the target accelerator); the *claims* each
+benchmark reproduces are scale-free (convergence shape, complexity
+exponent, batching speedup factors).
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (bench_batching, bench_compare, bench_complexity,
+               bench_convergence, bench_roofline)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller sizes")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("fig11", lambda: bench_convergence.run(n=1024 if args.quick else 2048)),
+        ("fig12-13", lambda: bench_complexity.run(
+            ns=(2048, 4096, 8192) if args.quick else (2048, 4096, 8192, 16384, 32768))),
+        ("fig14-15", lambda: bench_batching.run(n=8192 if args.quick else 16384)),
+        ("fig16-17", lambda: bench_compare.run(n=4096 if args.quick else 8192)),
+        ("roofline", lambda: bench_roofline.run()),
+    ]
+    failed = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Kernel ridge regression with an H-matrix operator + CG (paper §1, eq. 1).
+
+Fits f(y) = sin(4 y_0) cos(3 y_1) on a Halton design, solving
+(A + sigma^2 I) c = f with conjugate gradients where every A-product goes
+through the fast H-matrix matvec — the paper's motivating application.
+
+    PYTHONPATH=src python examples/kernel_regression.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_hmatrix, halton, make_matvec
+
+
+def cg(matvec, b, tol=1e-5, max_iter=300):
+    x = jnp.zeros_like(b)
+    r = b - matvec(x)
+    p, rs = r, jnp.dot(r, r)
+    for it in range(max_iter):
+        ap = matvec(p)
+        alpha = rs / jnp.dot(p, ap)
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.dot(r, r)
+        if float(jnp.sqrt(rs_new)) < tol:
+            return x, it + 1
+        p = r + (rs_new / rs) * p
+        rs = rs_new
+    return x, max_iter
+
+
+def main():
+    n, sigma2 = 16384, 1e-2
+    pts = halton(n, 2)
+    y = np.asarray(pts)
+    f = jnp.asarray((np.sin(4 * y[:, 0]) * np.cos(3 * y[:, 1])).astype(np.float32))
+
+    t0 = time.perf_counter()
+    hm = build_hmatrix(pts, "gaussian", k=16, c_leaf=256, precompute=True)
+    print(f"setup: {time.perf_counter() - t0:.2f}s   N={n}")
+
+    h_mv = make_matvec(hm)
+    op = lambda v: h_mv(v) + sigma2 * v
+    op(f)  # compile
+    t0 = time.perf_counter()
+    coef, iters = cg(op, f)
+    print(f"CG: {iters} iterations, {time.perf_counter() - t0:.2f}s")
+
+    resid = float(jnp.linalg.norm(op(coef) - f) / jnp.linalg.norm(f))
+    print(f"relative residual: {resid:.2e}")
+    pred = h_mv(coef) + sigma2 * coef
+    err = float(jnp.linalg.norm(pred - f) / jnp.linalg.norm(f))
+    print(f"training-set fit error: {err:.2e}")
+
+
+if __name__ == "__main__":
+    main()

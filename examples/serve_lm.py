@@ -1,0 +1,23 @@
+"""Serve a small model with batched requests: prefill + greedy decode.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def main():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    raise SystemExit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.serve",
+         "--arch", "qwen2.5-14b", "--smoke",
+         "--batch", "4", "--prompt-len", "32", "--decode-steps", "16"],
+        env=env))
+
+
+if __name__ == "__main__":
+    main()

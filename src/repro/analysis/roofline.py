@@ -1,0 +1,82 @@
+"""Three-term roofline model for TPU v5e (assignment hardware constants).
+
+    compute term    = FLOPs_per_chip / PEAK_FLOPS
+    memory term     = HBM_bytes_per_chip / HBM_BW
+    collective term = collective_bytes_per_chip / ICI_BW
+
+All inputs come from the dry-run compiled artifact via analysis.hlo (per
+device, trip-count adjusted).  MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D
+(MoE) per analysis.flops — the ratio MODEL_FLOPS / HLO_FLOPs exposes remat /
+redundancy waste.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (conservative: one link)
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops_per_chip: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap bound: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.flops_per_chip <= 0:
+            return 0.0
+        return self.model_flops_per_chip / self.flops_per_chip
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the ideal roofline achieved by the step-time bound:
+        (useful compute time) / (bound step time)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return (self.model_flops_per_chip / PEAK_FLOPS) / t
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant, "step_time_s": self.step_time_s,
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_terms(flops_per_chip: float, hbm_bytes_per_chip: float,
+                   collective_bytes_per_chip: float,
+                   model_flops_per_chip: float = 0.0) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=hbm_bytes_per_chip / HBM_BW,
+        collective_s=collective_bytes_per_chip / ICI_BW,
+        flops_per_chip=flops_per_chip,
+        hbm_bytes_per_chip=hbm_bytes_per_chip,
+        collective_bytes_per_chip=collective_bytes_per_chip,
+        model_flops_per_chip=model_flops_per_chip,
+    )

@@ -1,0 +1,30 @@
+"""The paper's own benchmark configuration (§6): H-matrix model problem.
+
+Not an LM arch — this is the configuration of the paper's experiments, kept
+alongside the assigned architectures so benchmarks and examples share one
+source of truth for the paper-faithful parameters.
+"""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HMatrixProblem:
+    name: str = "hmatrix-paper"
+    dim: int = 2                     # d in {2, 3}
+    kernel: str = "gaussian"         # gaussian | matern  (§6.2)
+    eta: float = 1.5                 # admissibility (§6.4/6.5)
+    k: int = 16                      # fixed ACA rank (§6.5)
+    c_leaf: int = 2048               # leaf size for perf runs (§6.5)
+    c_leaf_convergence: int = 256    # leaf size for the convergence study (§6.4)
+    bs_dense: int = 2 ** 27          # batching size, dense (§6.5)
+    bs_aca: int = 2 ** 25            # batching size, ACA (§6.5)
+    n_convergence: int = 32768       # problem size of the convergence study (§6.4)
+
+
+PAPER = HMatrixProblem()
+
+
+def smoke() -> HMatrixProblem:
+    """CPU-sized variant used by tests/benchmarks in this container."""
+    return HMatrixProblem(name="hmatrix-smoke", c_leaf=128,
+                          c_leaf_convergence=128, n_convergence=2048)

@@ -1,0 +1,28 @@
+"""repro.core — the paper's contribution: many-core H-matrix algorithms in JAX.
+
+Public API:
+    halton, get_kernel, dense_kernel_matrix      (geometry)
+    morton_encode, morton_sort                   (Z-order curve, §4.4)
+    build_cluster_tree                           (CBC clustering, §2.1)
+    build_block_tree, HMatrixPlan                (block cluster tree, §2.3/§4.1)
+    aca_fixed_rank, batched_aca                  (ACA, §2.4/§5.4.1)
+    build_hmatrix, make_matvec, HMatrix          (assembly + fast matvec, §2.5)
+    h_attention                                  (the technique inside the LM stack)
+"""
+from .geometry import halton, get_kernel, dense_kernel_matrix, gaussian_kernel, matern_kernel
+from .morton import morton_encode, morton_order, morton_sort
+from .clustering import ClusterTree, build_cluster_tree, permute_to_tree, permute_from_tree
+from .admissibility import admissible, diam, dist
+from .block_tree import HMatrixPlan, build_block_tree
+from .aca import aca_fixed_rank, batched_aca, aca_adaptive
+from .hmatrix import HMatrix, build_hmatrix, make_matvec, dense_matvec_oracle, compute_factors
+
+__all__ = [
+    "halton", "get_kernel", "dense_kernel_matrix", "gaussian_kernel", "matern_kernel",
+    "morton_encode", "morton_order", "morton_sort",
+    "ClusterTree", "build_cluster_tree", "permute_to_tree", "permute_from_tree",
+    "admissible", "diam", "dist",
+    "HMatrixPlan", "build_block_tree",
+    "aca_fixed_rank", "batched_aca", "aca_adaptive",
+    "HMatrix", "build_hmatrix", "make_matvec", "dense_matvec_oracle", "compute_factors",
+]

@@ -1,0 +1,28 @@
+"""Bounding-box admissibility condition (paper §2.2, eq. (3)).
+
+min(diam(Q_tau), diam(Q_sigma)) <= eta * dist(Q_tau, Q_sigma)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def diam(bb_min: jnp.ndarray, bb_max: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean diameter of axis-aligned boxes; shapes (..., d) -> (...)."""
+    e = bb_max - bb_min
+    return jnp.sqrt(jnp.sum(e * e, axis=-1))
+
+
+def dist(a_min: jnp.ndarray, a_max: jnp.ndarray,
+         b_min: jnp.ndarray, b_max: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean distance between axis-aligned boxes (0 if overlapping)."""
+    gap_ab = jnp.maximum(0.0, a_min - b_max)
+    gap_ba = jnp.maximum(0.0, b_min - a_max)
+    return jnp.sqrt(jnp.sum(gap_ab * gap_ab + gap_ba * gap_ba, axis=-1))
+
+
+def admissible(a_min, a_max, b_min, b_max, eta: float) -> jnp.ndarray:
+    """Vectorised eq. (3); broadcasts over leading dims."""
+    d_tau = diam(a_min, a_max)
+    d_sig = diam(b_min, b_max)
+    return jnp.minimum(d_tau, d_sig) <= eta * dist(a_min, a_max, b_min, b_max)

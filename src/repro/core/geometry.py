@@ -1,0 +1,134 @@
+"""Point sets and kernel functions for the paper's model problem (§6.2).
+
+The paper benchmarks collocation matrices  A[i, j] = phi(y_i, y_j)  where
+``Y`` is a Halton sequence on [0, 1]^d and ``phi`` is the (unscaled) Gaussian
+kernel or a Matérn kernel with ``beta - d/2 = 1`` (i.e. ``r * K_1(r)`` up to a
+constant).  Everything here is pure JAX so it runs inside jit/vmap/pallas
+reference paths.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Halton sequences (quasi Monte-Carlo), as used for the paper's point sets.
+# ---------------------------------------------------------------------------
+
+_PRIMES = (2, 3, 5, 7, 11, 13, 17, 19, 23, 29)
+
+
+def _radical_inverse(indices: jnp.ndarray, base: int, n_digits: int) -> jnp.ndarray:
+    """Vectorised radical inverse of ``indices`` in ``base``.
+
+    ``n_digits`` is static; 40 digits of base 2 covers N up to 2^40.
+    """
+    idx = indices.astype(jnp.uint64) if indices.dtype == jnp.uint64 else indices.astype(jnp.int64) if jax.config.jax_enable_x64 else indices.astype(jnp.int32)
+    result = jnp.zeros(indices.shape, jnp.float32)
+    inv_base = 1.0 / base
+    f = inv_base
+    for _ in range(n_digits):
+        digit = (idx % base).astype(jnp.float32)
+        result = result + digit * f
+        idx = idx // base
+        f = f * inv_base
+    return result
+
+
+def halton(n: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    """First ``n`` points of the ``d``-dimensional Halton sequence in [0,1]^d."""
+    if d > len(_PRIMES):
+        raise ValueError(f"halton supports d <= {len(_PRIMES)}")
+    idx = jnp.arange(1, n + 1)
+    n_digits = max(8, int(math.ceil(math.log(n + 1) / math.log(2))) + 1)
+    cols = [_radical_inverse(idx, _PRIMES[j], n_digits) for j in range(d)]
+    return jnp.stack(cols, axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel functions phi(y, y')
+# ---------------------------------------------------------------------------
+
+
+def _sqdist(y: jnp.ndarray, yp: jnp.ndarray) -> jnp.ndarray:
+    """Pairwise squared distances between (..., m, d) and (..., n, d)."""
+    # ||a-b||^2 = ||a||^2 + ||b||^2 - 2 a.b   (MXU-friendly: one matmul)
+    na = jnp.sum(y * y, axis=-1)[..., :, None]
+    nb = jnp.sum(yp * yp, axis=-1)[..., None, :]
+    cross = jnp.einsum("...md,...nd->...mn", y, yp)
+    return jnp.maximum(na + nb - 2.0 * cross, 0.0)
+
+
+def gaussian_kernel(y: jnp.ndarray, yp: jnp.ndarray) -> jnp.ndarray:
+    """phi_G(y, y') = exp(-||y - y'||^2)   (paper §6.2, unscaled)."""
+    return jnp.exp(-_sqdist(y, yp))
+
+
+def _bessel_k1(x: jnp.ndarray) -> jnp.ndarray:
+    """Modified Bessel function K_1 via Abramowitz & Stegun 9.8.7 / 9.8.8.
+
+    Accurate to ~1e-7 relative, which is plenty for the Matérn convergence
+    study (the paper reports relative errors down to ~1e-8 in double).
+    """
+    x = jnp.asarray(x)
+    small = x <= 2.0
+    xs = jnp.where(small, x, 2.0)  # keep args in-range to avoid NaNs
+    xl = jnp.where(small, 2.0, x)
+
+    # --- x <= 2:  K1(x) = ln(x/2) I1(x) + (1/x) * poly((x/2)^2)
+    t = (xs / 3.75) ** 2
+    i1 = xs * (0.5 + t * (0.87890594 + t * (0.51498869 + t * (0.15084934
+         + t * (0.02658733 + t * (0.00301532 + t * 0.00032411))))))
+    u = (xs / 2.0) ** 2
+    p = 1.0 + u * (0.15443144 + u * (-0.67278579 + u * (-0.18156897
+        + u * (-0.01919402 + u * (-0.00110404 + u * (-0.00004686))))))
+    k1_small = jnp.log(xs / 2.0) * i1 + p / xs
+
+    # --- x > 2:  K1(x) = exp(-x)/sqrt(x) * poly(2/x)
+    w = 2.0 / xl
+    q = 1.25331414 + w * (0.23498619 + w * (-0.03655620 + w * (0.01504268
+        + w * (-0.00780353 + w * (0.00325614 + w * (-0.00068245))))))
+    k1_large = jnp.exp(-xl) / jnp.sqrt(xl) * q
+
+    return jnp.where(small, k1_small, k1_large)
+
+
+def matern_kernel(y: jnp.ndarray, yp: jnp.ndarray, d: int | None = None) -> jnp.ndarray:
+    """Matérn kernel with ``beta - d/2 = 1`` (paper §6.2).
+
+    phi_M(y,y') = K_1(r) r / (2^(beta-1) Gamma(beta)),  beta = d/2 + 1.
+    ``r * K_1(r) -> 1`` as ``r -> 0`` so the diagonal is finite.
+    """
+    if d is None:
+        d = y.shape[-1]
+    beta = d / 2.0 + 1.0
+    norm = (2.0 ** (beta - 1.0)) * math.gamma(beta)
+    r = jnp.sqrt(_sqdist(y, yp))
+    tiny = 1e-30
+    val = jnp.where(r > 1e-8, r * _bessel_k1(jnp.maximum(r, tiny)), 1.0)
+    return val / norm
+
+
+KERNELS: dict[str, Callable] = {
+    "gaussian": gaussian_kernel,
+    "matern": matern_kernel,
+}
+
+
+def get_kernel(name: str) -> Callable:
+    if name not in KERNELS:
+        raise KeyError(f"unknown kernel {name!r}; have {sorted(KERNELS)}")
+    return KERNELS[name]
+
+
+def dense_kernel_matrix(points: jnp.ndarray, kernel: Callable | str = "gaussian",
+                        points_b: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Oracle: the full dense collocation matrix (test/bench use only)."""
+    if isinstance(kernel, str):
+        kernel = get_kernel(kernel)
+    pb = points if points_b is None else points_b
+    return kernel(points, pb)

@@ -1,0 +1,167 @@
+"""H-matrix assembly and fast matvec (paper §2.5, §5.4, Algorithm 3).
+
+``build_hmatrix`` constructs the cluster tree + block cluster tree and
+(optionally) precomputes the ACA factors (paper's *P* mode).  ``make_matvec``
+returns a jitted function computing ``z = H x`` by
+
+  * batched rank-k products for every admissible level-group (§5.4.1), and
+  * batched on-the-fly dense kernel-block products for the inadmissible
+    leaves (§5.4.2 — dense blocks are *never* precomputed, as in the paper).
+
+All batch groups have static shapes, so the whole matvec is a single jitted
+program.  Set ``use_pallas=True`` to route the two hot loops through the
+Pallas TPU kernels (validated against these jnp paths in tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aca import batched_aca
+from .block_tree import HMatrixPlan, build_block_tree
+from .clustering import ClusterTree, build_cluster_tree, permute_from_tree, permute_to_tree
+from .geometry import get_kernel
+
+
+@dataclass(frozen=True)
+class HMatrix:
+    tree: ClusterTree
+    plan: HMatrixPlan
+    kernel: Callable
+    kernel_name: str
+    k: int
+    factors: dict | None  # level -> (U, V) if precomputed (paper's P mode)
+
+    @property
+    def shape(self):
+        return (self.tree.n, self.tree.n)
+
+    def memory_report(self) -> dict:
+        """Bytes held by the representation (metadata vs factors)."""
+        factor_bytes = 0
+        if self.factors is not None:
+            for U, V in self.factors.values():
+                factor_bytes += U.size * U.dtype.itemsize + V.size * V.dtype.itemsize
+        meta = sum(v.nbytes for v in self.plan.aca_levels.values())
+        meta += self.plan.dense_blocks.nbytes
+        dense_equiv = self.tree.n * self.tree.n * 4
+        return {"factor_bytes": int(factor_bytes), "meta_bytes": int(meta),
+                "dense_equivalent_bytes": int(dense_equiv)}
+
+
+def _gather_cluster_points(tree: ClusterTree, level: int, ids: np.ndarray) -> jnp.ndarray:
+    """Points of clusters ``ids`` at ``level``: (B, m, d) via reshape+take."""
+    m = tree.n_pad >> level
+    return tree.points.reshape(1 << level, m, -1)[ids]
+
+
+def compute_factors(tree: ClusterTree, plan: HMatrixPlan, kernel: Callable, k: int) -> dict:
+    """Precompute ACA factors for every admissible level group (P mode)."""
+    factors = {}
+    for level, blocks in plan.aca_levels.items():
+        rp = _gather_cluster_points(tree, level, blocks[:, 0])
+        cp = _gather_cluster_points(tree, level, blocks[:, 1])
+        factors[level] = batched_aca(rp, cp, kernel, k)
+    return factors
+
+
+def build_hmatrix(coords: jnp.ndarray, kernel: str | Callable = "gaussian",
+                  k: int = 16, c_leaf: int = 256, eta: float = 1.5,
+                  precompute: bool = False) -> HMatrix:
+    """Full H-matrix construction (paper's "setup phase")."""
+    kernel_name = kernel if isinstance(kernel, str) else getattr(kernel, "__name__", "custom")
+    kfn = get_kernel(kernel) if isinstance(kernel, str) else kernel
+    tree = build_cluster_tree(coords, c_leaf=c_leaf)
+    plan = build_block_tree(tree, eta=eta)
+    factors = compute_factors(tree, plan, kfn, k) if precompute else None
+    return HMatrix(tree=tree, plan=plan, kernel=kfn, kernel_name=kernel_name,
+                   k=k, factors=factors)
+
+
+# ---------------------------------------------------------------------------
+# Fast matvec
+# ---------------------------------------------------------------------------
+
+
+def _aca_level_apply(tree, level, blocks, U, V, x_pad, z_pad):
+    m = tree.n_pad >> level
+    rows, cols = jnp.asarray(blocks[:, 0]), jnp.asarray(blocks[:, 1])
+    x_blk = x_pad.reshape(1 << level, m)[cols]                 # (B, m)
+    t = jnp.einsum("bmk,bm->bk", V, x_blk)                     # V^T x
+    y = jnp.einsum("bmk,bk->bm", U, t)                         # U t
+    zl = jnp.zeros((1 << level, m), x_pad.dtype).at[rows].add(y)
+    return z_pad + zl.reshape(-1)
+
+
+def _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas):
+    blocks = plan.dense_blocks
+    if blocks.shape[0] == 0:
+        return z_pad
+    c = plan.c_leaf
+    n_leaf = plan.n_pad // c
+    rows, cols = jnp.asarray(blocks[:, 0]), jnp.asarray(blocks[:, 1])
+    pts = points.reshape(n_leaf, c, -1)
+    x_blk = x_pad.reshape(n_leaf, c)[cols]                     # (B, c)
+    if use_pallas:
+        from repro.kernels.batched_dense_matvec.ops import batched_kernel_matvec
+        y = batched_kernel_matvec(pts[rows], pts[cols], x_blk, tree_kernel_name(kernel))
+    else:
+        a = kernel(pts[rows], pts[cols])                       # (B, c, c)
+        y = jnp.einsum("bij,bj->bi", a, x_blk)
+    zl = jnp.zeros((n_leaf, c), x_pad.dtype).at[rows].add(y)
+    return z_pad + zl.reshape(-1)
+
+
+def tree_kernel_name(kernel: Callable) -> str:
+    name = getattr(kernel, "__name__", "gaussian")
+    return {"gaussian_kernel": "gaussian", "matern_kernel": "matern"}.get(name, name)
+
+
+def make_matvec(hm: HMatrix, use_pallas: bool = False) -> Callable:
+    """Return jitted ``matvec(x) -> z`` (x, z in the ORIGINAL point order).
+
+    NP mode (``hm.factors is None``) recomputes the ACA factors inside every
+    product; P mode applies the stored factors (paper §5.4 & Fig 13).
+
+    The point array and factors are passed as runtime ARGUMENTS (not traced
+    constants): with closure capture XLA constant-folds the entire on-the-fly
+    kernel evaluation at compile time, silently turning NP mode into P mode.
+    """
+    tree, plan, kernel, k = hm.tree, hm.plan, hm.kernel, hm.k
+
+    @jax.jit
+    def _matvec(points, factors, x):
+        tr = tree  # static metadata (shapes/levels); `points` is the data
+        x_pad = permute_to_tree(tr, x)
+        z_pad = jnp.zeros_like(x_pad)
+        for level, blocks in plan.aca_levels.items():
+            if factors is not None:
+                U, V = factors[level]
+            else:
+                m = tr.n_pad >> level
+                rp = points.reshape(1 << level, m, -1)[jnp.asarray(blocks[:, 0])]
+                cp = points.reshape(1 << level, m, -1)[jnp.asarray(blocks[:, 1])]
+                if use_pallas:
+                    from repro.kernels.batched_aca.ops import batched_aca_pallas
+                    U, V = batched_aca_pallas(rp, cp, tree_kernel_name(kernel), k)
+                else:
+                    U, V = batched_aca(rp, cp, kernel, k)
+            z_pad = _aca_level_apply(tr, level, blocks, U, V, x_pad, z_pad)
+        z_pad = _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas)
+        return permute_from_tree(tr, z_pad)
+
+    def matvec(x: jnp.ndarray) -> jnp.ndarray:
+        return _matvec(tree.points, hm.factors, x)
+
+    return matvec
+
+
+def dense_matvec_oracle(coords: jnp.ndarray, kernel: str | Callable, x: jnp.ndarray) -> jnp.ndarray:
+    """O(N^2) oracle for tests/benchmarks."""
+    kfn = get_kernel(kernel) if isinstance(kernel, str) else kernel
+    return kfn(coords, coords) @ x

@@ -1,0 +1,75 @@
+"""Z-order (Morton) space-filling curve — the paper's §4.4 spatial structure.
+
+The paper computes a Morton code per point (fixed-point quantisation, bit
+stretch, dimension-wise interleave — Algorithm 6) and sorts points by code so
+that cardinality-based clustering reduces to splitting a contiguous array.
+
+TPU adaptation: instead of 64-bit scalar codes (CUDA), we build the code in
+two 32-bit halves (``hi``, ``lo``) with pure uint32 ops — no x64 mode needed —
+and sort lexicographically (stable), which is exactly equivalent to sorting
+the 64-bit concatenation.  A Pallas kernel version of the encoder lives in
+``repro.kernels.morton``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bits_per_dim(d: int) -> int:
+    """Quantisation bits per dimension; total interleaved bits <= 63."""
+    return min(32, 63 // d)
+
+
+def quantize(coords: jnp.ndarray, n_bits: int) -> jnp.ndarray:
+    """Fixed-point representation of coords assumed to live in [0, 1]^d.
+
+    Matches the paper's COMPUTE_FIXED_POINT_REPRESENTATION: values are scaled
+    to [0, 2^n_bits) and clamped.
+    """
+    scale = jnp.float32(2.0**n_bits - 1.0)
+    q = jnp.clip(coords, 0.0, 1.0) * scale
+    # float32(2^31 - 1) rounds UP to 2^31: clamp after the cast so the code
+    # never exceeds n_bits bits (coordinate exactly 1.0 would otherwise
+    # quantise to a value whose only set bit lies outside the interleave).
+    return jnp.minimum(q.astype(jnp.uint32), jnp.uint32(2**n_bits - 1))
+
+
+def morton_encode(coords: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Morton codes for points ``coords`` of shape (N, d) in [0,1]^d.
+
+    Returns ``(hi, lo)`` uint32 halves of the (conceptually 64-bit) code.
+    The interleave loop is unrolled at trace time (<= 63 iterations of
+    uint32 shift/or — the paper's STRETCH_BITS + INTERLEAVE in one pass).
+    """
+    n, d = coords.shape
+    nb = bits_per_dim(d)
+    fx = quantize(coords, nb)  # (N, d) uint32
+    lo = jnp.zeros((n,), jnp.uint32)
+    hi = jnp.zeros((n,), jnp.uint32)
+    one = jnp.uint32(1)
+    for b in range(nb):
+        for dim in range(d):
+            # Bit b of dimension `dim` lands at interleaved position b*d+dim,
+            # counting from the LSB; dimension 0 provides the least
+            # significant of each group (x-major interleave).
+            out_pos = b * d + dim
+            bit = (fx[:, dim] >> jnp.uint32(b)) & one
+            if out_pos < 32:
+                lo = lo | (bit << jnp.uint32(out_pos))
+            else:
+                hi = hi | (bit << jnp.uint32(out_pos - 32))
+    return hi, lo
+
+
+def morton_order(coords: jnp.ndarray) -> jnp.ndarray:
+    """Permutation sorting points along the Z-order curve (stable)."""
+    hi, lo = morton_encode(coords)
+    # lexsort: last key is the primary key.
+    return jnp.lexsort((lo, hi))
+
+
+def morton_sort(coords: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sort points along the Z-curve; returns (sorted_coords, permutation)."""
+    order = morton_order(coords)
+    return coords[order], order

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel: batched fixed-rank adaptive cross approximation.
+
+The paper's §5.4.1 batched ACA — the single most important batching win in
+the paper (32x on GPU, Fig 15).  TPU adaptation (DESIGN.md §3.3/3.4):
+
+  * fixed rank k  ->  static ``fori_loop`` (no voting mechanism needed: every
+    block runs exactly k pivoted rank-1 updates);
+  * matrix entries generated on the fly from the point coordinates — only one
+    column + one row of the block ever exist per iteration (O(m+n) VMEM);
+  * data-dependent pivoting stays *inside* the kernel: ``argmax`` over the
+    masked residual picks the row pivot, the masked last residual row picks
+    the next column pivot (partial pivoting, as in Algorithm 2).
+
+Grid: one program per block b.
+VMEM working set per program (m = n = block size, f32):
+    rows_t/cols_t : 2 * d * m * 4 B
+    U, V          : 2 * m * k * 4 B     (loop carry)
+    masks, rows   : ~4 * m * 4 B
+  m=8192, k=32, d=3: ~2.4 MB << 16 MB VMEM.  The ops wrapper falls back to
+  the jnp path for coarser levels whose blocks exceed the VMEM budget — the
+  TPU analogue of the paper's ``bs_ACA`` batching-size heuristic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .._phi import pairwise_sqdist_t, phi_from_sqdist
+
+
+def _masked_argmax(x, mask):
+    return jnp.argmax(jnp.abs(x) * mask - (1.0 - mask)).astype(jnp.int32)
+
+
+def _kernel(rows_t_ref, cols_t_ref, u_ref, v_ref, *, k: int, kernel_name: str,
+            point_dim: int):
+    rows_t = rows_t_ref[0]          # (d, m)
+    cols_t = cols_t_ref[0]          # (d, n)
+    d, m = rows_t.shape
+    n = cols_t.shape[1]
+    dtype = rows_t.dtype
+
+    def phi_col(j):
+        """Column j of the block: phi(rows, col_j) -> (m,)."""
+        cp = lax.dynamic_slice(cols_t, (0, j), (d, 1))       # (d, 1)
+        d2 = pairwise_sqdist_t(rows_t, cp)[:, 0]             # (m,)
+        return phi_from_sqdist(d2, kernel_name, point_dim)
+
+    def phi_row(i):
+        """Row i of the block: phi(row_i, cols) -> (n,)."""
+        rp = lax.dynamic_slice(rows_t, (0, i), (d, 1))
+        d2 = pairwise_sqdist_t(rp, cols_t)[0, :]
+        return phi_from_sqdist(d2, kernel_name, point_dim)
+
+    def body(r, carry):
+        u_mat, v_mat, row_mask, col_mask, j_r = carry
+        u_hat = phi_col(j_r) - jnp.dot(u_mat, lax.dynamic_slice(v_mat, (j_r, 0), (1, k))[0],
+                                       preferred_element_type=jnp.float32)
+        i_r = _masked_argmax(u_hat, row_mask)
+        alpha = u_hat[i_r]
+        safe = jnp.abs(alpha) > jnp.asarray(1e-30, dtype)
+        inv = jnp.where(safe, 1.0 / jnp.where(safe, alpha, 1.0), 0.0)
+        u_r = u_hat * inv
+        v_r = phi_row(i_r) - jnp.dot(v_mat, lax.dynamic_slice(u_mat, (i_r, 0), (1, k))[0],
+                                     preferred_element_type=jnp.float32)
+        v_r = jnp.where(safe, v_r, jnp.zeros_like(v_r))
+        onehot_r = (jnp.arange(k) == r).astype(dtype)        # (k,)
+        u_mat = u_mat + u_r[:, None] * onehot_r[None, :]
+        v_mat = v_mat + v_r[:, None] * onehot_r[None, :]
+        row_mask = row_mask * (1.0 - (jnp.arange(m) == i_r).astype(dtype))
+        col_mask = col_mask * (1.0 - (jnp.arange(n) == j_r).astype(dtype))
+        j_next = _masked_argmax(v_r, col_mask)
+        return u_mat, v_mat, row_mask, col_mask, j_next
+
+    init = (jnp.zeros((m, k), dtype), jnp.zeros((n, k), dtype),
+            jnp.ones((m,), dtype), jnp.ones((n,), dtype), jnp.asarray(0, jnp.int32))
+    u_mat, v_mat, _, _, _ = lax.fori_loop(0, k, body, init)
+    u_ref[0] = u_mat
+    v_ref[0] = v_mat
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "k", "interpret"))
+def batched_aca_t(rows_t: jnp.ndarray, cols_t: jnp.ndarray,
+                  kernel_name: str, k: int, interpret: bool = True):
+    """Batched rank-k ACA.  rows_t: (B, d, m), cols_t: (B, d, n).
+
+    Returns (U, V): (B, m, k), (B, n, k) with phi(rows, cols) ~= U V^T.
+    """
+    b, d, m = rows_t.shape
+    n = cols_t.shape[2]
+    return pl.pallas_call(
+        functools.partial(_kernel, k=k, kernel_name=kernel_name, point_dim=d),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, d, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, n), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m, k), rows_t.dtype),
+            jax.ShapeDtypeStruct((b, n, k), rows_t.dtype),
+        ],
+        interpret=interpret,
+    )(rows_t, cols_t)

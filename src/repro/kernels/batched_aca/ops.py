@@ -1,0 +1,37 @@
+"""jit'd public wrapper for the batched ACA Pallas kernel.
+
+Implements the paper's ``bs_ACA`` batching-size heuristic for TPU: blocks
+whose VMEM working set would overflow the budget (coarse levels with very
+large clusters) fall back to the vmapped jnp path; everything else goes
+through the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import batched_aca_t
+from .ref import batched_aca_ref
+
+# Conservative VMEM budget for one program's working set (bytes).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _vmem_bytes(m: int, n: int, d: int, k: int, itemsize: int = 4) -> int:
+    return itemsize * (d * (m + n) + 2 * (m * k + n * k) + 4 * (m + n))
+
+
+def batched_aca_pallas(rows: jnp.ndarray, cols: jnp.ndarray,
+                       kernel_name: str, k: int):
+    """rows, cols: (B, m, d), (B, n, d) -> (U (B,m,k), V (B,n,k))."""
+    b, m, d = rows.shape
+    n = cols.shape[1]
+    if _vmem_bytes(m, n, d, k) > VMEM_BUDGET:
+        return batched_aca_ref(rows, cols, kernel_name, k)
+    rows_t = jnp.swapaxes(rows, -1, -2)
+    cols_t = jnp.swapaxes(cols, -1, -2)
+    return batched_aca_t(rows_t, cols_t, kernel_name, k, interpret=_use_interpret())

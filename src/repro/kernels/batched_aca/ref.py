@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the batched ACA kernel: repro.core.aca.batched_aca."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.aca import batched_aca
+from repro.core.geometry import get_kernel
+
+
+def batched_aca_ref(rows: jnp.ndarray, cols: jnp.ndarray, kernel_name: str, k: int):
+    """rows, cols: (B, m, d), (B, n, d) -> (U, V)."""
+    return batched_aca(rows, cols, get_kernel(kernel_name), k)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: batched fused kernel-evaluation + dense matvec.
+
+The paper's §5.4.2 batched dense sub-matrix application (MAGMA
+``magmablas_dgemv_vbatched`` on GPU).  TPU adaptation (DESIGN.md §3.3):
+
+  * ragged batches -> every inadmissible leaf block is exactly
+    (C_leaf x C_leaf) by balanced CBC, so the batch is perfectly regular;
+  * the matrix entries are *generated in VMEM* from the point coordinates
+    (phi(y_i, y_j)) and consumed immediately by the MXU matvec — the block is
+    never written to HBM (the paper's "dense blocks are never precomputed"
+    taken one level further: they never even exist in main memory).
+
+Grid: one program per block b.
+VMEM working set per program (C = C_leaf, d = point dim, f32):
+    rows_t, cols_t : 2 * d * C * 4 B           (points, lane-major)
+    x              : C * 4 B
+    A              : C * C * 4 B               (generated scores)
+    y              : C * 4 B
+  C=512, d=3: ~1.06 MB  << 16 MB VMEM.  C and the MXU contraction dim are
+  multiples of 128 for C_leaf in {128, 256, 512}.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .._phi import pairwise_sqdist_t, phi_from_sqdist
+
+
+def _kernel(rows_t_ref, cols_t_ref, x_ref, y_ref, *, kernel_name: str, point_dim: int):
+    rows_t = rows_t_ref[0]            # (d, C)
+    cols_t = cols_t_ref[0]            # (d, C)
+    x = x_ref[0]                      # (C,)
+    d2 = pairwise_sqdist_t(rows_t, cols_t)            # (C, C)  VPU
+    a = phi_from_sqdist(d2, kernel_name, point_dim)   # (C, C)  VPU
+    y_ref[0, :] = jnp.dot(a, x, preferred_element_type=jnp.float32)  # MXU
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "interpret"))
+def batched_kernel_matvec_t(rows_t: jnp.ndarray, cols_t: jnp.ndarray,
+                            x: jnp.ndarray, kernel_name: str = "gaussian",
+                            interpret: bool = True) -> jnp.ndarray:
+    """y[b] = phi(rows[b], cols[b]) @ x[b].
+
+    rows_t, cols_t: (B, d, C) lane-major points; x: (B, C) -> (B, C).
+    """
+    b, d, c = rows_t.shape
+    grid = (b,)
+    return pl.pallas_call(
+        functools.partial(_kernel, kernel_name=kernel_name, point_dim=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), x.dtype),
+        interpret=interpret,
+    )(rows_t, cols_t, x)

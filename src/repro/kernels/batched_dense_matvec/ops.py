@@ -1,0 +1,25 @@
+"""jit'd public wrapper for the batched dense kernel-matvec Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import batched_kernel_matvec_t
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def batched_kernel_matvec(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
+                          kernel_name: str = "gaussian") -> jnp.ndarray:
+    """y[b] = phi(rows[b], cols[b]) @ x[b].
+
+    rows, cols: (B, C, d) points; x: (B, C).  Transposes to the lane-major
+    (B, d, C) layout the kernel wants (fused into the surrounding program by
+    XLA) and dispatches to the Pallas kernel.
+    """
+    rows_t = jnp.swapaxes(rows, -1, -2)
+    cols_t = jnp.swapaxes(cols, -1, -2)
+    return batched_kernel_matvec_t(rows_t, cols_t, x, kernel_name,
+                                   interpret=_use_interpret())

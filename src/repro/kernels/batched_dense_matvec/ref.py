@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the batched fused kernel-matvec."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.geometry import get_kernel
+
+
+def batched_kernel_matvec_ref(rows: jnp.ndarray, cols: jnp.ndarray,
+                              x: jnp.ndarray, kernel_name: str = "gaussian") -> jnp.ndarray:
+    """rows, cols: (B, C, d); x: (B, C) -> (B, C)."""
+    a = get_kernel(kernel_name)(rows, cols)          # (B, C, C)
+    return jnp.einsum("bij,bj->bi", a, x)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: H-attention near-field (dense leaf) blocks.
+
+Computes, for every leaf i of the 1-D causal H-matrix partition, the exact
+contribution of the two inadmissible blocks (i, i) [causal-masked] and
+(i, i-1) [full]:
+
+    num[i] = exp(S_ii - m_i) V_i + exp(S_ii-1 - m_i) V_{i-1}
+    den[i] = rowsum(exp(S_ii - m_i)) + rowsum(exp(S_ii-1 - m_i))
+    m[i]   = rowmax over both blocks          (the far-field stabiliser)
+
+This is the hot dense part of core/hattention.h_attention — the analogue of
+the paper's batched dense sub-matrix application (§5.4.2), with the score
+blocks GENERATED in VMEM from q/k tiles and never written to HBM.
+
+Grid: one program per (batch*head, leaf) pair.
+VMEM per program (c = c_leaf, D = head dim, f32):
+    q, k_cur, k_prev, v_cur, v_prev : 5 * c * D * 4
+    scores (two blocks)             : 2 * c * c * 4
+  c=512, D=128: ~3.4 MB << 16 MB.  c and D are MXU-aligned multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, kp_ref, v_ref, vp_ref, first_ref,
+            num_ref, den_ref, m_ref):
+    q = q_ref[0, 0]                   # (c, D) pre-scaled
+    k = k_ref[0, 0]
+    kp = kp_ref[0, 0]
+    v = v_ref[0, 0]
+    vp = vp_ref[0, 0]
+    first = first_ref[0]              # (1,) int32: 1 if leaf 0 (no prev block)
+    c = q.shape[0]
+
+    s_diag = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # MXU
+    ii = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    s_diag = jnp.where(ii >= jj, s_diag, NEG)
+    s_prev = jnp.dot(q, kp.T, preferred_element_type=jnp.float32)
+    s_prev = jnp.where(first[0] > 0, NEG, s_prev)
+
+    m = jnp.maximum(s_diag.max(-1), s_prev.max(-1))                # (c,)
+    p_diag = jnp.exp(s_diag - m[:, None])
+    p_prev = jnp.exp(s_prev - m[:, None])
+    num = jnp.dot(p_diag, v, preferred_element_type=jnp.float32) + \
+          jnp.dot(p_prev, vp, preferred_element_type=jnp.float32)
+    num_ref[0, 0] = num
+    den_ref[0, 0] = p_diag.sum(-1) + p_prev.sum(-1)
+    m_ref[0, 0] = m
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hattention_nearfield(q, k, v, interpret: bool = True):
+    """q, k, v: (BH, n_leaf, c, D); q pre-scaled.  Returns (num, den, m):
+    (BH, n_leaf, c, D), (BH, n_leaf, c), (BH, n_leaf, c)."""
+    bh, nl, c, d = q.shape
+    k_prev = jnp.concatenate([jnp.zeros_like(k[:, :1]), k[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(v[:, :1]), v[:, :-1]], axis=1)
+    first = (jnp.arange(nl) == 0).astype(jnp.int32)[None].repeat(bh, 0)  # (BH, nl)
+
+    grid = (bh, nl)
+    blk = lambda i, j: (i, j, 0, 0)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, c, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, c), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, nl, c, d), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nl, c), jnp.float32),
+            jax.ShapeDtypeStruct((bh, nl, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, k_prev, v, v_prev, first)

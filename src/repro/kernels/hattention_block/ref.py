@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the H-attention near-field kernel (mirrors the dense
+leaf computation in core/hattention.h_attention)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def hattention_nearfield_ref(q, k, v):
+    """q, k, v: (BH, n_leaf, c, D); q pre-scaled -> (num, den, m)."""
+    bh, nl, c, d = q.shape
+    s_diag = jnp.einsum("bncd,bnkd->bnck", q, k)
+    ii = jnp.arange(c)
+    s_diag = jnp.where((ii[:, None] >= ii[None, :])[None, None], s_diag, NEG)
+    kp = jnp.concatenate([jnp.zeros_like(k[:, :1]), k[:, :-1]], axis=1)
+    vp = jnp.concatenate([jnp.zeros_like(v[:, :1]), v[:, :-1]], axis=1)
+    s_prev = jnp.einsum("bncd,bnkd->bnck", q, kp)
+    firstmask = (jnp.arange(nl) == 0)[None, :, None, None]
+    s_prev = jnp.where(firstmask, NEG, s_prev)
+    m = jnp.maximum(s_diag.max(-1), s_prev.max(-1))
+    p_diag = jnp.exp(s_diag - m[..., None])
+    p_prev = jnp.exp(s_prev - m[..., None])
+    num = jnp.einsum("bnck,bnkd->bncd", p_diag, v) + \
+          jnp.einsum("bnck,bnkd->bncd", p_prev, vp)
+    den = p_diag.sum(-1) + p_prev.sum(-1)
+    return num, den, m

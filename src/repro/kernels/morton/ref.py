@@ -1,0 +1,11 @@
+"""Oracle for the Morton Pallas kernel: repro.core.morton.morton_encode."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.morton import morton_encode
+
+
+def morton_encode_ref(coords: jnp.ndarray):
+    """coords: (N, d) -> (hi, lo) uint32."""
+    return morton_encode(coords)

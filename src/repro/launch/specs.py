@@ -1,0 +1,166 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + shardings for every step.
+
+No device allocation happens here — everything is eval_shape'd, which is
+what lets the dry-run lower full-size (arch x shape) cells on one CPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.api import get_model
+from repro.parallel.mesh_ctx import current_mesh, resolve_spec
+from repro.parallel.sharding import param_specs, opt_state_specs
+
+WHISPER_DEC_PREFILL = 64      # decoder prompt length for enc-dec prefill
+WHISPER_DEC_CACHE = 4096      # decoder self-cache capacity for enc-dec decode
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _batch_entry(batch: int):
+    return ("pod", "data")
+
+
+def token_spec(batch: int, seq: int):
+    return _sds((batch, seq), jnp.int32), P(_batch_entry(batch), None)
+
+
+def embed_spec(cfg, batch: int, seq: int):
+    return (_sds((batch, seq, cfg.d_model), jnp.dtype(cfg.dtype)),
+            P(_batch_entry(batch), None, None))
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (structure mirrors models.*.init_caches)
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_leaf_spec(shape, batch_dim: int, batch: int) -> P:
+    """(…, B, S, Hkv, D): batch over DP; cache seq over 'model'
+    (flash-decode); at batch==1 the sequence absorbs the DP axes too
+    (context parallelism for long_500k)."""
+    ent = [None] * len(shape)
+    mesh = current_mesh()
+    dp = 1
+    if mesh is not None:
+        for a in ("pod", "data"):
+            dp *= mesh.shape.get(a, 1)
+    if batch % dp == 0 and dp > 1:
+        ent[batch_dim] = ("pod", "data")
+        ent[batch_dim + 1] = "model"
+    else:
+        ent[batch_dim + 1] = ("pod", "data", "model")
+    return resolve_spec(shape, P(*ent))
+
+
+def _state_cache_leaf_spec(shape, batch_dim: int, batch: int) -> P:
+    """SSM-ish states (…, B, H, …): batch over DP, heads over model."""
+    ent = [None] * len(shape)
+    ent[batch_dim] = ("pod", "data")
+    if len(shape) > batch_dim + 1:
+        ent[batch_dim + 1] = "model"
+    return resolve_spec(shape, P(*ent))
+
+
+def cache_specs(cfg: ArchConfig, caches_struct, batch: int):
+    """PartitionSpec tree matching the cache structure."""
+    if cfg.is_encoder_decoder:
+        def leaf(path_kind, x):
+            return _attn_cache_leaf_spec(x.shape, 1, batch)  # (L, B, S, H, D)
+        return {
+            "self": jax.tree.map(partial(leaf, "self"), caches_struct["self"]),
+            "cross": jax.tree.map(partial(leaf, "cross"), caches_struct["cross"]),
+        }
+
+    from repro.models.lm import _pattern_split
+    pattern, n_periods, tail = _pattern_split(cfg)
+
+    def one(kind, cache, batch_dim):
+        if kind in ("dense", "moe", "shared_attn"):
+            return jax.tree.map(
+                lambda x: _attn_cache_leaf_spec(x.shape, batch_dim, batch), cache)
+        return jax.tree.map(
+            lambda x: _state_cache_leaf_spec(x.shape, batch_dim, batch), cache)
+
+    return {"pattern": [one(kind, c, 1) for kind, c in
+                        zip(pattern, caches_struct["pattern"])],
+            "tail": [one(kind, c, 0) for kind, c in
+                     zip(tail, caches_struct["tail"])]}
+
+
+# ---------------------------------------------------------------------------
+# Step input specs
+# ---------------------------------------------------------------------------
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """(batch_struct, batch_spec_tree) for train_step."""
+    tok, tok_spec = token_spec(shape.global_batch, shape.seq_len)
+    batch = {"tokens": tok, "labels": tok}
+    specs = {"tokens": tok_spec, "labels": tok_spec}
+    if cfg.frontend == "audio_stub":
+        emb, emb_spec = embed_spec(cfg, shape.global_batch, shape.seq_len)
+        batch["embeds"] = emb
+        specs["embeds"] = emb_spec
+    return batch, specs
+
+
+def state_struct_and_specs(cfg: ArchConfig, init_state):
+    """eval_shape the train state; build (struct, spec tree).
+
+    Optimizer moments get ZeRO-1 "data" sharding on top of the param TP spec.
+    """
+    struct = jax.eval_shape(init_state, jax.random.PRNGKey(0))
+    p_specs = param_specs(struct["params"], cfg.num_experts)
+    o_specs = {k: opt_state_specs(struct["params"], cfg.num_experts)
+               for k in struct["opt"]}
+    specs = {"step": P(), "params": p_specs, "opt": o_specs}
+    return struct, specs
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    if cfg.is_encoder_decoder:
+        emb, emb_spec = embed_spec(cfg, shape.global_batch, shape.seq_len)
+        tok, tok_spec = token_spec(shape.global_batch, WHISPER_DEC_PREFILL)
+        return {"tokens": tok, "embeds": emb}, {"tokens": tok_spec, "embeds": emb_spec}
+    tok, tok_spec = token_spec(shape.global_batch, shape.seq_len)
+    return {"tokens": tok}, {"tokens": tok_spec}
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Unified entry: ShapeDtypeStruct stand-ins + PartitionSpecs for the
+    step function matching ``shape.kind`` (weak-type-correct, shardable,
+    no device allocation).
+
+    train  -> (batch_struct, batch_specs)        for train_step(state, batch)
+    prefill-> (inputs, specs)                    for prefill_step(params, **)
+    decode -> (inputs, specs) incl. caches       for decode_step(params, **)
+    """
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig, model=None):
+    model = model or get_model(cfg)
+    b = shape.global_batch
+    tok, tok_spec = token_spec(b, 1)
+    if cfg.is_encoder_decoder:
+        caches = jax.eval_shape(
+            lambda: model["init_caches"](b, WHISPER_DEC_CACHE, shape.seq_len))
+    else:
+        caches = jax.eval_shape(lambda: model["init_caches"](b, shape.seq_len))
+    c_specs = cache_specs(cfg, caches, b)
+    inputs = {"tokens": tok, "caches": caches,
+              "cache_len": _sds((), jnp.int32)}
+    specs = {"tokens": tok_spec, "caches": c_specs, "cache_len": P()}
+    return inputs, specs

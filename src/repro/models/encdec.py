@@ -1,0 +1,187 @@
+"""Encoder-decoder transformer (whisper-tiny backbone).
+
+The conv/audio frontend is a STUB per the assignment: callers provide
+precomputed frame embeddings (B, S_enc, d_model).  Encoder: bidirectional
+self-attention + GELU MLP with sinusoidal positions.  Decoder: causal
+self-attention + cross-attention to the encoder output + GELU MLP with
+learned positions.  Both stacks scan over layers.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import (BATCH, apply_norm, attention_block, chunked_attention,
+                     dense_init, embed_init, lm_head, make_attention_params,
+                     make_mlp_params, make_norm_params, mlp_block,
+                     make_norm_params as _mn, sinusoidal_positions)
+
+MAX_DEC_POS = 1 << 16  # learned decoder positions table (max 64k; clipped above)
+
+
+def _make_enc_layer(key, cfg, dtype):
+    keys = jax.random.split(key, 4)
+    return {"ln1": make_norm_params(keys[0], cfg.norm_type, cfg.d_model, dtype),
+            "attn": make_attention_params(keys[1], cfg, dtype),
+            "ln2": make_norm_params(keys[2], cfg.norm_type, cfg.d_model, dtype),
+            "mlp": make_mlp_params(keys[3], cfg, dtype)}
+
+
+def _make_dec_layer(key, cfg, dtype):
+    keys = jax.random.split(key, 6)
+    return {"ln1": make_norm_params(keys[0], cfg.norm_type, cfg.d_model, dtype),
+            "self_attn": make_attention_params(keys[1], cfg, dtype),
+            "ln_x": make_norm_params(keys[2], cfg.norm_type, cfg.d_model, dtype),
+            "cross_attn": make_attention_params(keys[3], cfg, dtype),
+            "ln2": make_norm_params(keys[4], cfg.norm_type, cfg.d_model, dtype),
+            "mlp": make_mlp_params(keys[5], cfg, dtype)}
+
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    enc_keys = jax.random.split(keys[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(keys[1], cfg.n_layers)
+    return {
+        "enc_layers": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[_make_enc_layer(k, cfg, dtype) for k in enc_keys]),
+        "dec_layers": jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[_make_dec_layer(k, cfg, dtype) for k in dec_keys]),
+        "embed": embed_init(keys[2], cfg.padded_vocab, cfg.d_model, dtype),
+        "dec_pos": embed_init(keys[3], 4096, cfg.d_model, dtype),
+        "enc_norm": make_norm_params(keys[4], cfg.norm_type, cfg.d_model, dtype),
+        "dec_norm": make_norm_params(keys[5], cfg.norm_type, cfg.d_model, dtype),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, D) precomputed frame embeddings (frontend stub)."""
+    b, s, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype)) + sinusoidal_positions(s, d, jnp.dtype(cfg.dtype))
+
+    def body(x, lp):
+        h = apply_norm(cfg.norm_type, lp["ln1"], x)
+        attn, _ = attention_block(lp["attn"], cfg, h, positions=jnp.arange(s),
+                                  mode="train", causal=False)
+        x = x + attn
+        h = apply_norm(cfg.norm_type, lp["ln2"], x)
+        x = x + mlp_block(lp["mlp"], cfg, h)
+        return x, None
+
+    x, _ = lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg.norm_type, params["enc_norm"], x)
+
+
+def _cross_kv(lp, cfg, enc_out):
+    """Precompute cross-attention K/V from encoder output for one layer."""
+    b, s, _ = enc_out.shape
+    hd = cfg.head_dim_
+    k = (enc_out @ lp["cross_attn"]["wk"])
+    v = (enc_out @ lp["cross_attn"]["wv"])
+    if cfg.qkv_bias:
+        k, v = k + lp["cross_attn"]["bk"], v + lp["cross_attn"]["bv"]
+    return (k.reshape(b, s, cfg.n_kv_heads, hd), v.reshape(b, s, cfg.n_kv_heads, hd))
+
+
+def decode_stack(params, cfg, tokens, enc_out=None, *, mode="train",
+                 caches=None, cache_len=None):
+    """tokens: (B, S_dec).  Returns (logits, new_caches).
+
+    caches (decode): {"self": stacked (k,v), "cross": stacked (k,v)} — cross
+    K/V are computed once (at prefill) from the encoder output.
+    """
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if mode == "decode":
+        positions = cache_len + jnp.zeros((s,), jnp.int32)
+        pos_emb = jnp.take(params["dec_pos"],
+                           jnp.clip(positions, 0, params["dec_pos"].shape[0] - 1), axis=0)
+    else:
+        positions = jnp.arange(s)
+        pos_emb = params["dec_pos"][jnp.clip(positions, 0, params["dec_pos"].shape[0] - 1)]
+    x = x + pos_emb
+    want_cache = mode in ("prefill", "decode")
+
+    def body(x, inp):
+        lp, cache = inp
+        self_cache = cache["self"] if cache is not None else None
+        h = apply_norm(cfg.norm_type, lp["ln1"], x)
+        attn, new_self = attention_block(
+            lp["self_attn"], cfg, h, positions=positions, mode=mode,
+            cache=self_cache, cache_len=cache_len)
+        x = x + attn
+        # cross attention
+        h = apply_norm(cfg.norm_type, lp["ln_x"], x)
+        if mode == "decode":
+            ck, cv = cache["cross"]
+        else:
+            ck, cv = _cross_kv(lp, cfg, enc_out)
+        cross, _ = attention_block(lp["cross_attn"], cfg, h, positions=positions,
+                                   mode="train", kv_override=(ck, cv), causal=False)
+        x = x + cross
+        h = apply_norm(cfg.norm_type, lp["ln2"], x)
+        x = x + mlp_block(lp["mlp"], cfg, h)
+        new_cache = ({"self": new_self, "cross": (ck, cv)} if want_cache else None)
+        return x, new_cache
+
+    if caches is not None:
+        # decode: caches ride in the CARRY, updated in place per layer
+        # (ys-restacking rewrites the full stacked self+cross caches every
+        # layer; see models/lm.py and EXPERIMENTS §Perf iteration 3)
+        def body_carry(carry, inp):
+            x, caches_c = carry
+            lp, idx = inp
+            layer_cache = jax.tree.map(
+                lambda c: lax.dynamic_index_in_dim(c, idx, 0, keepdims=False),
+                caches_c)
+            x, new_cache = body(x, (lp, layer_cache))
+            # cross K/V are read-only in decode; only self caches change
+            caches_c = dict(caches_c)
+            caches_c["self"] = jax.tree.map(
+                lambda c, nc: lax.dynamic_update_index_in_dim(
+                    c, nc.astype(c.dtype), idx, 0),
+                caches_c["self"], new_cache["self"])
+            return (x, caches_c), None
+
+        n_layers = cfg.n_layers
+        (x, new_caches), _ = lax.scan(
+            body_carry, (x, caches),
+            (params["dec_layers"], jnp.arange(n_layers)))
+    else:
+        def body_nc(x, lp):
+            return body(x, (lp, None))
+        x, new_caches = lax.scan(body_nc, x, params["dec_layers"])
+        if not want_cache:
+            new_caches = None
+
+    x = apply_norm(cfg.norm_type, params["dec_norm"], x)
+    logits = lm_head(x, params["embed"], tie=True)
+    return logits, new_caches
+
+
+def forward(params, cfg, tokens=None, embeds=None, *, mode="train",
+            caches=None, cache_len=None, remat: bool = False):
+    """Unified entry matching models.lm.forward.
+
+    train/prefill: ``embeds`` = encoder frames, ``tokens`` = decoder tokens.
+    decode: ``tokens`` = (B, 1); cross K/V live in ``caches``.
+    """
+    if mode == "decode":
+        return decode_stack(params, cfg, tokens, None, mode=mode,
+                            caches=caches, cache_len=cache_len)
+    enc_out = encode(params, cfg, embeds)
+    return decode_stack(params, cfg, tokens, enc_out, mode=mode,
+                        caches=None, cache_len=cache_len)
+
+
+def init_caches(cfg, batch: int, max_seq: int, enc_seq: int):
+    dtype = jnp.dtype(cfg.dtype)
+    hd = cfg.head_dim_
+    L = cfg.n_layers
+    self_shape = (L, batch, max_seq, cfg.n_kv_heads, hd)
+    cross_shape = (L, batch, enc_seq, cfg.n_kv_heads, hd)
+    return {"self": (jnp.zeros(self_shape, dtype), jnp.zeros(self_shape, dtype)),
+            "cross": (jnp.zeros(cross_shape, dtype), jnp.zeros(cross_shape, dtype))}

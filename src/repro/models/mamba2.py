@@ -1,0 +1,175 @@
+"""Mamba2 (SSD — state-space duality) block, chunk-parallel.
+
+The chunked SSD algorithm is matmul-dominated — a natural MXU fit (this is
+the hardware-adaptation story for the SSM archs: the recurrence becomes
+batched GEMMs within chunks + a short scan across chunks).
+
+Train/prefill: ``ssd_chunked``  (O(S * chunk) intra + O(S/chunk) scan).
+Decode:        ``ssd_step``     (constant-time state update; the SSM state
+                                 (B, H, P, N) is the "KV cache").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.mesh_ctx import constrain
+
+from .layers import BATCH, dense_init
+
+
+def _segsum(logd):
+    """Lower-triangular cumulative sums: out[i, j] = sum_{j < k <= i} logd[k].
+
+    logd: (..., L) -> (..., L, L) with -inf above the diagonal.
+    """
+    L = logd.shape[-1]
+    csum = jnp.cumsum(logd, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]            # sum_(j<k<=i)
+    ii = jnp.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk: int):
+    """Chunked SSD scan.
+
+    x:     (B, S, H, P)    inputs per head
+    dt:    (B, S, H)       softplus-activated step sizes
+    a_log: (H,)            log(-A) parameterisation, A = -exp(a_log)
+    b_mat: (B, S, N)       input projection (single group)
+    c_mat: (B, S, N)       output projection
+    d_skip:(H,)            skip connection
+    Returns (B, S, H, P), final_state (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                   # (H,) negative
+    dtf = dt.astype(jnp.float32)
+    da = dtf * a                                              # (B,S,H) log-decay per step
+
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    dac = da.reshape(bsz, nc, chunk, h)
+    dtc = dtf.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic in chunk, batched matmuls) ----------------
+    #   y_intra[b,c,l,h,p] = sum_k scores[b,c,l,k] * decay[b,c,h,l,k]
+    #                        * dt[b,c,k,h] * x[b,c,k,h,p]
+    lmat = _segsum(dac.transpose(0, 1, 3, 2))                 # (B,nc,H,L,L)
+    scores = jnp.einsum("bcln,bckn->bclk", cc, bc)            # (B,nc,L,L)
+    decay = jnp.exp(lmat)                                     # masked lower-tri
+    w = scores[:, :, None, :, :] * decay                      # (B,nc,H,L,L)
+    wx = w * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]      # weight by dt_k
+    y_intra = jnp.einsum("bchlk,bckhp->bclhp", wx, xc)
+
+    # ---- chunk states ------------------------------------------------------
+    # state contribution of chunk c: sum_k decay(end..k) * dt_k * B_k x_k
+    dac_t = dac.transpose(0, 1, 3, 2)                         # (B,nc,H,L)
+    total = dac_t.sum(-1, keepdims=True)
+    decay_to_end = jnp.exp(total - jnp.cumsum(dac_t, axis=-1))  # decay from k+1..end
+    sb = jnp.einsum("bchk,bckh,bckn,bckhp->bchpn",
+                    decay_to_end, dtc, bc, xc)                # (B,nc,H,P,N)
+
+    # ---- inter-chunk scan --------------------------------------------------
+    chunk_decay = jnp.exp(total[..., 0])                      # (B,nc,H)
+
+    def step(state, inp):
+        dec, s_new = inp                                       # (B,H), (B,H,P,N)
+        state = state * dec[..., None, None] + s_new
+        return state, state
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final_state, states = lax.scan(step, init,
+                                   (chunk_decay.swapaxes(0, 1), sb.swapaxes(0, 1)))
+    # states[c] = state AFTER chunk c; we need state BEFORE chunk c.
+    states_before = jnp.concatenate([init[None], states[:-1]], axis=0)  # (nc,B,H,P,N)
+    states_before = states_before.transpose(1, 0, 2, 3, 4)     # (B,nc,H,P,N)
+
+    # ---- inter-chunk output ------------------------------------------------
+    decay_from_start = jnp.exp(jnp.cumsum(dac_t, axis=-1))     # decay 1..l
+    y_inter = jnp.einsum("bcln,bchl,bchpn->bclhp", cc, decay_from_start, states_before)
+
+    y = y_intra + y_inter + d_skip.astype(jnp.float32)[None, None, :, None] * xc
+    return y.reshape(bsz, s, h, p).astype(x.dtype), final_state
+
+
+def ssd_step(state, x, dt, a_log, b_vec, c_vec, d_skip):
+    """Single-token recurrent update.  state: (B, H, P, N)."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)                               # (B, H)
+    da = jnp.exp(dtf * a)                                      # (B, H)
+    xb = jnp.einsum("bhp,bn->bhpn", x.astype(jnp.float32) * dtf[..., None],
+                    b_vec.astype(jnp.float32))
+    state = state * da[..., None, None] + xb
+    y = jnp.einsum("bhpn,bn->bhp", state, c_vec.astype(jnp.float32))
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (projections around the SSD core)
+# ---------------------------------------------------------------------------
+
+
+def make_mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    h = d_inner // cfg.ssm_head_dim
+    n = cfg.ssm_state
+    keys = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(keys[0], d, 2 * d_inner + 2 * n + h, dtype),
+        "w_out": dense_init(keys[1], d_inner, d, dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+    }
+
+
+def mamba_block(p, cfg, x, *, mode: str, state=None):
+    """x: (B, S, D).  Returns (out, new_state)."""
+    bsz, s, d = x.shape
+    d_inner = cfg.ssm_expand * d
+    hd = cfg.ssm_head_dim
+    h = d_inner // hd
+    n = cfg.ssm_state
+
+    zxbcdt = x @ p["w_in"]
+    z, xs, b_mat, c_mat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    xh = xs.reshape(bsz, s, h, hd)
+    xh = constrain(xh, BATCH, None, "model", None)
+
+    if mode == "decode":
+        y, new_state = ssd_step(state, xh[:, 0], dt[:, 0], p["a_log"],
+                                b_mat[:, 0], c_mat[:, 0], p["d_skip"])
+        y = y[:, None]
+    else:
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            # dt=0 on padded steps => decay exp(0)=1, input 0: state-neutral
+            xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_p = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+            c_p = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+            y, new_state = ssd_chunked(xh_p, dt_p, p["a_log"], b_p, c_p,
+                                       p["d_skip"], chunk)
+            y = y[:, :s]
+        else:
+            y, new_state = ssd_chunked(xh, dt, p["a_log"], b_mat, c_mat,
+                                       p["d_skip"], chunk)
+    y = y.reshape(bsz, s, d_inner)
+    out = (y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)) @ p["w_out"]
+    return out, new_state
+
+
+def mamba_state_shape(cfg, batch: int):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = d_inner // cfg.ssm_head_dim
+    return (batch, h, cfg.ssm_head_dim, cfg.ssm_state)

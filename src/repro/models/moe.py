@@ -1,0 +1,145 @@
+"""Mixture-of-Experts layer with capacity-based dispatch.
+
+The dispatch is the paper's §4.2/§4.3 pattern transplanted: tokens routed to
+each expert form *many non-equally-sized batches*; we make them regular by
+(1) computing per-expert counts, (2) an exclusive scan for slot offsets, and
+(3) a scatter compaction into fixed-capacity per-expert buffers — then one
+batched einsum does all experts at once (the MoE analogue of batched BLAS).
+
+Parallel modes (DESIGN.md §5):
+  * TP  — every expert's d_ff sharded over "model" (always applicable);
+  * EP  — experts sharded over "model" when num_experts % tp == 0; the
+    scatter/gather around the expert einsum becomes XLA all-to-alls.
+Mode is chosen by ``moe_parallel_mode`` (config override or auto).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.mesh_ctx import axis_size, constrain
+
+from .layers import BATCH, dense_init
+
+
+def make_moe_params(key, cfg, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    keys = jax.random.split(key, 4)
+    # Experts stacked on a leading E axis (shardable for EP).
+    def stack(k, d_in, d_out):
+        ks = jax.random.split(k, e)
+        return jnp.stack([dense_init(ki, d_in, d_out, dtype) for ki in ks])
+
+    # gate and up projections CONCATENATED on the output dim: one einsum in
+    # the forward means ONE dispatch-buffer-gradient all-reduce in the
+    # backward instead of two (perf iteration 2, EXPERIMENTS §Perf).
+    return {
+        "router": dense_init(keys[0], d, e, jnp.float32),
+        "wg": stack(keys[1], d, f),
+        "wu": stack(keys[2], d, f),
+        "wd": stack(keys[3], f, d),
+    }
+
+
+def moe_parallel_mode(cfg) -> str:
+    tp = max(axis_size("model"), 1)
+    return "ep" if cfg.num_experts % tp == 0 and tp > 1 else "tp"
+
+
+def moe_block(p, cfg, x, *, capacity_factor: float | None = None):
+    """x: (B, S, D) -> (B, S, D).  Top-k routing, capacity dropping.
+
+    GROUPED dispatch (perf iteration 1, EXPERIMENTS §Perf): tokens are
+    grouped by DP shard and scattered into a per-group expert buffer
+    (G, E, cap_g, D) that stays sharded on G.  The expert einsum consumes
+    the buffer resharded to the expert axis — ONE all-to-all each way.
+    The earlier ungrouped scatter built a replicated (E*cap, D) buffer whose
+    gradient XLA materialised with ~10 TB/device/step of all-reduce on
+    mixtral train_4k (measured; see EXPERIMENTS.md).
+    """
+    b, s, d = x.shape
+    e, topk = cfg.num_experts, cfg.experts_per_token
+    cf = capacity_factor or cfg.moe_capacity_factor
+    t = b * s
+    dp = axis_size("pod") * axis_size("data")
+    g_cnt = dp if (t % dp == 0 and dp > 1) else 1
+    tg = t // g_cnt
+    capg = int(max(1, (tg * topk * cf) // e))
+    mode = moe_parallel_mode(cfg)
+    ep_spec = ("model" if mode == "ep" else None)
+
+    xt = x.reshape(g_cnt, tg, d)
+    xt = constrain(xt, BATCH, None, None)
+    logits = (xt.astype(jnp.float32) @ p["router"])            # (G, Tg, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, topk)                  # (G, Tg, K)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+
+    # --- count -> exclusive scan -> compact, PER GROUP (paper pattern) ----
+    flat_e = top_e.reshape(g_cnt, tg * topk)
+    flat_g = top_g.reshape(g_cnt, tg * topk)
+    flat_tok = jnp.tile(jnp.repeat(jnp.arange(tg), topk)[None], (g_cnt, 1))
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)        # (G, TgK, E)
+    pos_in_e = jnp.cumsum(onehot, axis=1) * onehot             # scan within group
+    slot = pos_in_e.sum(-1) - 1                                # (G, TgK)
+    keep = slot < capg
+    dest = flat_e * capg + jnp.where(keep, slot, 0)            # (G, TgK)
+
+    gidx = jnp.arange(g_cnt)[:, None]
+    vals = jnp.where(keep[..., None], jnp.take_along_axis(
+        xt, flat_tok[..., None], axis=1), 0)                   # (G, TgK, D)
+    buf = jnp.zeros((g_cnt, e * capg, d), x.dtype).at[gidx, dest].add(vals)
+    buf = buf.reshape(g_cnt, e, capg, d)
+    buf = constrain(buf, BATCH, None, None, None)              # group-sharded
+    if mode == "ep":
+        # reshard group->expert: all-to-all instead of an all-reduce.
+        # (In TP mode an unconditional constrain here resolves to
+        # fully-replicated and forces a 10.7 GB/device buffer all-gather —
+        # measured; the buffer must STAY group-sharded.)
+        buf = constrain(buf, None, "model", None, None)
+
+    # --- one batched einsum for ALL experts (batched-BLAS analogue) ------
+    # NOTE (perf iteration 2, refuted): concatenating wg|wu into one einsum
+    # to halve the backward dispatch-gradient all-reduces made GSPMD reshard
+    # the split outputs via 3.7 TB of collective-permute — net LOSS; kept as
+    # two einsums.  Intermediates stay in the model dtype (bf16): TP
+    # reductions move half the bytes vs f32 (iteration 3).
+    # silu stays in the model dtype: an explicit f32 upcast here makes the
+    # cotangent of `gate` f32, doubling the bytes of the TP backward
+    # all-reduce of d(buf) (measured: 2x5.4 GB f32 x 256 trips).
+    gate = jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+    up = jnp.einsum("gecd,edf->gecf", buf, p["wu"])
+    h = jax.nn.silu(gate) * up
+    if mode == "ep":
+        h = constrain(h, None, "model", None, None)
+    else:
+        h = constrain(h, BATCH, None, None, "model")
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["wd"]).astype(x.dtype)
+    if mode == "ep":
+        out_buf = constrain(out_buf, None, "model", None, None)
+    # reshard expert->group for the combine (the reverse all-to-all in EP)
+    out_buf = constrain(out_buf, BATCH, None, None, None)
+    out_buf = out_buf.reshape(g_cnt, e * capg, d)
+
+    # --- gather back + combine with gate weights --------------------------
+    # combine in the MODEL dtype: an f32 accumulator here makes every
+    # upstream cotangent f32 via the cast transpose, doubling the bytes of
+    # the TP backward all-reduces (measured on mixtral train_4k).
+    back = out_buf[gidx, dest]                                 # (G, TgK, D)
+    back = jnp.where(keep[..., None], back, 0)
+    combined = jnp.zeros((g_cnt, tg, d), x.dtype)
+    combined = combined.at[gidx, flat_tok].add(
+        back * flat_g[..., None].astype(x.dtype))
+    out = combined.reshape(b, s, d)
+    return constrain(out, BATCH, None, None)
+
+
+def router_aux_loss(p, cfg, x) -> jnp.ndarray:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    b, s, d = x.shape
+    logits = x.reshape(-1, d).astype(jnp.float32) @ p["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    _, top_e = jax.lax.top_k(gates, cfg.experts_per_token)
+    me = gates.mean(0)
+    ce = jax.nn.one_hot(top_e, cfg.num_experts).sum(1).mean(0)
+    return cfg.num_experts * jnp.sum(me * ce)

@@ -1,0 +1,241 @@
+"""xLSTM blocks: chunk-parallel mLSTM (matrix memory) + sequential sLSTM.
+
+mLSTM recurrence (per head, stabilised exponential gating):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        (matrix memory, D_v x D_k)
+    n_t = f_t n_{t-1} + i_t k_t              (normaliser)
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with i_t = exp(i~_t - m_t), f_t = exp(logsig(f~_t)), and running stabiliser
+m_t = max(logf_cum + i~).  The chunkwise form mirrors mamba2.ssd_chunked:
+batched GEMMs inside chunks, short scan across chunks.
+
+sLSTM keeps a true hidden-state recurrence (R h_{t-1} in the gates) and is
+therefore sequential — a lax.scan over time (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.mesh_ctx import constrain
+
+from .layers import BATCH, dense_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (chunk-parallel)
+# ---------------------------------------------------------------------------
+
+
+def mlstm_chunked(q, k, v, i_pre, f_pre, chunk: int):
+    """q, k, v: (B, S, H, D); i_pre, f_pre: (B, S, H) pre-activations.
+
+    Returns (B, S, H, D), final (C, n, m) state.
+    Stabilised per-chunk: within a chunk we subtract the chunk-local max of
+    the accumulated log gates (exact, not an approximation — the stabiliser
+    cancels in the h_t ratio).
+    """
+    b, s, h, d = q.shape
+    nc = s // chunk
+    scale = d ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(b, nc, chunk, h, d) * scale
+    kf = k.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    vf = v.astype(jnp.float32).reshape(b, nc, chunk, h, d)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32)).reshape(b, nc, chunk, h)
+    ipre = i_pre.astype(jnp.float32).reshape(b, nc, chunk, h)
+
+    logf_c = jnp.cumsum(logf, axis=2)                          # within-chunk cumsum
+    logf_total = logf_c[:, :, -1]                              # (B,nc,H)
+
+    # log weight of (k_j -> q_l) inside chunk: logf_c[l] - logf_c[j] + ipre[j]
+    lw = logf_c[:, :, :, None, :] - logf_c[:, :, None, :, :] + ipre[:, :, None, :, :]
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+    lw = jnp.where(causal[None, None, :, :, None], lw, -jnp.inf)  # (B,nc,L,L,H)
+    # log weight of initial state -> q_l: logf_c[l]  (plus incoming m)
+    lw_state = logf_c                                          # (B,nc,L,H)
+
+    # chunk-state contribution of key j: logf_total - logf_c[j] + ipre[j]
+    lw_to_end = logf_total[:, :, None, :] - logf_c + ipre      # (B,nc,L,H)
+
+    def step(carry, inp):
+        c_st, n_st, m_st = carry                               # (B,H,D,D),(B,H,D),(B,H)
+        qc, kc, vc, lwc, lw_st, lw_end, lf_tot = inp
+        # stabiliser for this chunk's outputs: max over (l, j) and the
+        # incoming-state path, per (batch, head)
+        m_local = jnp.maximum(lwc.max(axis=(1, 2)),            # (B,H)
+                              lw_st.max(axis=1) + m_st)
+        m_local = jnp.maximum(m_local, -1e30)
+        # intra-chunk
+        w = jnp.exp(lwc - m_local[:, None, None, :])           # (B,L,L,H)
+        sc = jnp.einsum("blhd,bjhd->bljh", qc, kc)
+        num_intra = jnp.einsum("bljh,bljh,bjhd->blhd", sc, w, vc)
+        den_intra = jnp.einsum("bljh,bljh,bjh->blh", sc, w,
+                               jnp.ones(kc.shape[:3]))
+        # state contribution
+        w_st = jnp.exp(lw_st + m_st[:, None, :] - m_local[:, None, :])  # (B,L,H)
+        qs = jnp.einsum("blhd,bhde->blhe", qc, c_st)
+        num_state = qs * w_st[..., None]
+        den_state = jnp.einsum("blhd,bhd->blh", qc, n_st) * w_st
+        num = num_intra + num_state
+        den = jnp.abs(den_intra + den_state)
+        y = num / jnp.maximum(den, jnp.exp(-m_local)[:, None, :])[..., None]
+        # update state (stabilised by new running max m_new)
+        m_new = jnp.maximum(lf_tot + m_st, lw_end.max(axis=1))
+        w_end = jnp.exp(lw_end - m_new[:, None, :])            # (B,L,H)
+        c_new = c_st * jnp.exp(lf_tot + m_st - m_new)[..., None, None] + \
+            jnp.einsum("blh,blhd,blhe->bhde", w_end, kc, vc)
+        n_new = n_st * jnp.exp(lf_tot + m_st - m_new)[..., None] + \
+            jnp.einsum("blh,blhd->bhd", w_end, kc)
+        return (c_new, n_new, m_new), y
+
+    init = (jnp.zeros((b, h, d, d), jnp.float32),
+            jnp.zeros((b, h, d), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32))
+    xs = (qf.swapaxes(0, 1), kf.swapaxes(0, 1), vf.swapaxes(0, 1),
+          lw.swapaxes(0, 1), lw_state.swapaxes(0, 1),
+          lw_to_end.swapaxes(0, 1), logf_total.swapaxes(0, 1))
+    (c_st, n_st, m_st), ys = lax.scan(step, init, xs)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, d)
+    return y.astype(q.dtype), (c_st, n_st, m_st)
+
+
+def mlstm_step(state, q, k, v, i_pre, f_pre):
+    """Single-token recurrent mLSTM update.  state: (C, n, m)."""
+    c_st, n_st, m_st = state
+    d = q.shape[-1]
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))       # (B,H)
+    ipre = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m_st, ipre)
+    i_g = jnp.exp(ipre - m_new)
+    f_g = jnp.exp(logf + m_st - m_new)
+    c_new = c_st * f_g[..., None, None] + \
+        i_g[..., None, None] * jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n_new = n_st * f_g[..., None] + i_g[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+    den = jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new))
+    y = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return y.astype(q.dtype), (c_new, n_new, m_new)
+
+
+def make_mlstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    d_inner = 2 * d
+    h = cfg.n_heads
+    keys = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(keys[0], d, 2 * d_inner, dtype),
+        "wq": dense_init(keys[1], d_inner, d_inner, dtype),
+        "wk": dense_init(keys[2], d_inner, d_inner, dtype),
+        "wv": dense_init(keys[3], d_inner, d_inner, dtype),
+        "w_if": dense_init(keys[4], d_inner, 2 * h, dtype),
+        "w_down": dense_init(keys[5], d_inner, d, dtype),
+        "f_bias": jnp.ones((h,), jnp.float32) * 3.0,           # open forget gates
+    }
+
+
+def mlstm_block(p, cfg, x, *, mode: str, state=None):
+    b, s, d = x.shape
+    d_inner = 2 * d
+    h = cfg.n_heads
+    hd = d_inner // h
+    up = x @ p["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    q = (xm @ p["wq"]).reshape(b, s, h, hd)
+    k = (xm @ p["wk"]).reshape(b, s, h, hd)
+    v = (xm @ p["wv"]).reshape(b, s, h, hd)
+    q = constrain(q, BATCH, None, "model", None)
+    gates = xm @ p["w_if"]
+    i_pre = gates[..., :h].astype(jnp.float32)
+    f_pre = gates[..., h:].astype(jnp.float32) + p["f_bias"]
+    if mode == "decode":
+        y, new_state = mlstm_step(state, q[:, 0], k[:, 0], v[:, 0],
+                                  i_pre[:, 0], f_pre[:, 0])
+        y = y[:, None]
+    else:
+        chunk = min(cfg.ssm_chunk, s)
+        pad = (-s) % chunk
+        if pad:
+            # padded steps: i -> -30 (no input), f -> +30 (no decay): the
+            # carried (C, n, m) state is preserved exactly
+            pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+            q_p, k_p, v_p = (jnp.pad(t, pad4) for t in (q, k, v))
+            i_p = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                          constant_values=-30.0)
+            f_p = jnp.pad(f_pre, ((0, 0), (0, pad), (0, 0)),
+                          constant_values=30.0)
+            y, new_state = mlstm_chunked(q_p, k_p, v_p, i_p, f_p, chunk)
+            y = y[:, :s]
+        else:
+            y, new_state = mlstm_chunked(q, k, v, i_pre, f_pre, chunk)
+    y = y.reshape(b, s, d_inner)
+    out = (y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)) @ p["w_down"]
+    return out, new_state
+
+
+def mlstm_state_shape(cfg, batch: int):
+    d_inner = 2 * cfg.d_model
+    hd = d_inner // cfg.n_heads
+    return ((batch, cfg.n_heads, hd, hd), (batch, cfg.n_heads, hd), (batch, cfg.n_heads))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (sequential scan; true recurrence)
+# ---------------------------------------------------------------------------
+
+
+def make_slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    keys = jax.random.split(key, 3)
+    return {
+        # input weights for 4 gates (z, i, f, o)
+        "w_x": dense_init(keys[0], d, 4 * d, dtype),
+        # block-diagonal recurrent weights, per head: (H, hd, 4*hd)
+        "r_h": (jax.random.normal(keys[1], (h, hd, 4 * hd)) / jnp.sqrt(hd)).astype(dtype),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": dense_init(keys[2], d, d, dtype),
+    }
+
+
+def slstm_block(p, cfg, x, *, mode: str, state=None):
+    """x: (B, S, D).  Sequential scan over time (hidden-state recurrence)."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd = d // h
+    wx = (x @ p["w_x"]).astype(jnp.float32)                    # (B,S,4D)
+
+    def cell(carry, wx_t):
+        c, n, m, hid = carry                                   # each (B, H, hd) / m,(B,H)
+        rec = jnp.einsum("bhd,hde->bhe", hid, p["r_h"].astype(jnp.float32))
+        gates = wx_t.reshape(b, h, 4 * hd) + rec + p["bias"].reshape(h, 4 * hd)
+        zt, it, ft, ot = jnp.split(gates, 4, axis=-1)
+        zt = jnp.tanh(zt)
+        ot = jax.nn.sigmoid(ot)
+        # stabilised exponential gating (per head & unit)
+        logf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(logf + m[..., None], it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(logf + m[..., None] - m_new)
+        c_new = f_g * c + i_g * zt
+        n_new = f_g * n + i_g
+        hid_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        m_scalar = m_new.max(-1)
+        return (c_new, n_new, m_scalar, hid_new), hid_new
+
+    init = (jnp.zeros((b, h, hd), jnp.float32), jnp.zeros((b, h, hd), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32), jnp.zeros((b, h, hd), jnp.float32))
+    if mode == "decode" and state is not None:
+        init = state
+    carry, hs = lax.scan(cell, init, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(b, s, d).astype(x.dtype)
+    return y @ p["w_out"], carry
+
+
+def slstm_state_shape(cfg, batch: int):
+    h = cfg.n_heads
+    hd = cfg.d_model // h
+    return ((batch, h, hd), (batch, h, hd), (batch, h), (batch, h, hd))

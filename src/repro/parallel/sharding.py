@@ -1,0 +1,168 @@
+"""Parameter / optimizer / cache sharding rules (logical -> mesh axes).
+
+Megatron-style TP pairs on the "model" axis, DP over ("pod", "data"),
+ZeRO-1 optimizer-state sharding over "data".  Rules are path-based over the
+param pytree; every spec is sanitised by ``resolve_spec`` (missing axes and
+non-divisible dims fall back to replication), so one rule set covers all ten
+architectures.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh_ctx import current_mesh, resolve_spec
+
+# (path regex, spec) — first match wins.  Paths look like
+# "pattern/0/attn/wq" or "dec_layers/cross_attn/wk"; stacked params carry a
+# leading period axis which the `stacked` flag accounts for.
+_RULES = [
+    (r"embed$", P("model", None)),
+    (r"lm_head$", P(None, "model")),
+    (r"dec_pos$", P(None, None)),
+    (r"(attn|self_attn|cross_attn)/w[qkv]$", P(None, "model")),
+    (r"(attn|self_attn|cross_attn)/wo$", P("model", None)),
+    (r"(attn|self_attn|cross_attn)/b[qkv]$", P("model")),
+    (r"mlp/w[gu]$", P(None, "model")),
+    (r"mlp/wd$", P("model", None)),
+    (r"moe/router$", P(None, None)),
+    (r"moe/w[gu]$", P("ep", None, "model")),   # "ep" resolved specially below
+    (r"moe/wd$", P("ep", "model", None)),
+    (r"mamba/w_in$", P(None, "model")),
+    (r"mamba/w_out$", P("model", None)),
+    (r"mlstm/w_up$", P(None, "model")),
+    (r"mlstm/w[qkv]$", P(None, "model")),
+    (r"mlstm/w_down$", P("model", None)),
+    (r"mlstm/w_if$", P(None, None)),
+    (r"slstm/w_x$", P(None, None)),
+    (r"slstm/r_h$", P(None, None, None)),
+    (r"slstm/w_out$", P(None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _moe_resolve(spec: P, num_experts: int, tp: int) -> P:
+    """Resolve the "ep" pseudo-axis: experts sharded over model when
+    divisible (EP), else the feature dim keeps the "model" axis (TP)."""
+    entries = list(spec)
+    if entries and entries[0] == "ep":
+        if tp > 1 and num_experts % tp == 0:
+            # EP: expert axis takes "model"; drop it from the feature dim
+            entries = ["model"] + [None if e == "model" else e for e in entries[1:]]
+        else:
+            entries[0] = None
+    return P(*entries)
+
+
+def param_spec_for(path: str, shape, num_experts: int = 0) -> P:
+    from .mesh_ctx import current_mesh
+    mesh = current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            spec = _moe_resolve(spec, num_experts, tp)
+            # stacked (scan) params have a leading period axis
+            if len(shape) == len(spec) + 1:
+                spec = P(*([None] + list(spec)))
+            return resolve_spec(shape, spec)
+    return resolve_spec(shape, P())   # replicate (norms, biases, scalars)
+
+
+def param_specs(params, num_experts: int = 0):
+    """Tree of PartitionSpec matching ``params``."""
+    def spec(path, leaf):
+        return param_spec_for(_path_str(path), leaf.shape, num_experts)
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def zero1_spec(spec: P, shape) -> P:
+    """Add "data" sharding to the first free, divisible dim (ZeRO-1)."""
+    mesh = current_mesh()
+    if mesh is None or "data" not in mesh.axis_names:
+        return spec
+    dsz = mesh.shape["data"]
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for nm in (e if isinstance(e, tuple) else (e,)):
+            if nm:
+                used.add(nm)
+    if "data" in used:
+        return spec
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsz == 0 and dim >= dsz:
+            entries[i] = "data"
+            return P(*entries)
+        if e is not None and not isinstance(e, tuple):
+            sz = mesh.shape.get(e, 1)
+            if dim % (sz * dsz) == 0:
+                entries[i] = (e, "data")
+                return P(*entries)
+    return spec
+
+
+def opt_state_specs(params, num_experts: int = 0):
+    """ZeRO-1: optimizer moments sharded over 'data' on top of the TP spec."""
+    def spec(path, leaf):
+        base = param_spec_for(_path_str(path), leaf.shape, num_experts)
+        return zero1_spec(base, leaf.shape)
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def to_named(tree_of_specs):
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Cache / batch specs
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(global_batch: int) -> P:
+    """Tokens (B, S): batch over all DP axes."""
+    return P(("pod", "data"), None)
+
+
+def cache_spec(kind: str, shape, *, batch: int) -> P:
+    """Spec for one block's decode cache leaf.
+
+    Attention caches (…, B, S, Hkv, D): batch over data when divisible, cache
+    sequence over "model" (flash-decode); at batch=1 (long_500k) the sequence
+    takes ("data", "model") — context parallelism.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return P()
+    dsz = mesh.shape.get("data", 1)
+    lead = len(shape) - 4 if kind in ("dense", "moe", "shared_attn", "self", "cross") else None
+    batch_ok = batch % max(dsz, 1) == 0 and dsz > 1
+    if kind in ("dense", "moe", "shared_attn", "self", "cross"):
+        pre = [None] * (len(shape) - 4)
+        if batch_ok:
+            return resolve_spec(shape, P(*pre, ("pod", "data"), "model", None, None))
+        return resolve_spec(shape, P(*pre, None, ("pod", "data", "model"), None, None))
+    # SSM-ish states: (…, B, H, P, N) / mlstm tuples etc: batch over data,
+    # heads over model where divisible.
+    pre = [None] * (len(shape) - 4) if len(shape) >= 4 else []
+    rest = len(shape) - len(pre)
+    if rest >= 2:
+        ent = [("pod", "data"), "model"] + [None] * (rest - 2)
+        return resolve_spec(shape, P(*(pre + ent)))
+    return resolve_spec(shape, P())

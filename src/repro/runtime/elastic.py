@@ -1,0 +1,52 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and re-shard.
+
+Policy: keep the "model" (TP) axis intact — TP is chosen to divide every
+weight dim, so shrinking it would invalidate the sharding rules — and
+shrink the DP axis to the largest multiple that the surviving device count
+supports.  Re-sharding a checkpointed state onto the new mesh is a
+``device_put`` with the new NamedShardings (runtime.checkpoint.restore
+accepts them directly).
+
+At 1000+ nodes the device set comes from the cluster scheduler; here it is
+a parameter so tests can drop devices.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def largest_dp(n_devices: int, model_size: int) -> int:
+    """Largest DP size such that dp * model_size <= n_devices (pow2-greedy)."""
+    dp = n_devices // model_size
+    # prefer powers of two (keeps global batch divisibility simple)
+    p = 1
+    while p * 2 <= dp:
+        p *= 2
+    return p
+
+
+def rebuild_mesh(devices=None, model_size: int = 16) -> Mesh:
+    """Build the largest (data, model) mesh from the surviving devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    if len(devices) < model_size:
+        raise RuntimeError(
+            f"cannot keep model axis {model_size} with {len(devices)} devices")
+    dp = largest_dp(len(devices), model_size)
+    used = devices[: dp * model_size]
+    arr = np.array(used).reshape(dp, model_size)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_state(state, new_shardings):
+    """Re-shard a live state pytree onto a new mesh (elastic migration)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        state, new_shardings)
+
+
+def rescale_batch(global_batch: int, old_dp: int, new_dp: int) -> int:
+    """Keep per-replica batch constant across elastic events."""
+    per = global_batch // old_dp
+    return per * new_dp

@@ -1,0 +1,44 @@
+"""Serving steps: prefill (build caches + first logits) and decode (one token).
+
+Shapes follow the assignment:
+  * ``prefill_step(params, tokens)``      tokens (B, S) -> logits (B, S, V), caches
+  * ``decode_step(params, tokens, caches, cache_len)``
+        tokens (B, 1) + caches of capacity S -> logits (B, 1, V), new caches
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import get_model
+
+
+def make_prefill_step(cfg):
+    model = get_model(cfg)
+
+    def prefill_step(params, tokens, embeds=None):
+        logits, caches = model["forward"](params, tokens=tokens, embeds=embeds,
+                                          mode="prefill")
+        return logits[:, -1:], caches
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    model = get_model(cfg)
+
+    def decode_step(params, tokens, caches, cache_len):
+        logits, new_caches = model["forward"](params, tokens=tokens,
+                                              mode="decode", caches=caches,
+                                              cache_len=cache_len)
+        return logits, new_caches
+
+    return decode_step
+
+
+def greedy_sample(logits, vocab_size: int):
+    """Greedy over the REAL vocab (padded entries masked)."""
+    lf = logits.astype(jnp.float32)
+    mask = jnp.arange(lf.shape[-1]) < vocab_size
+    lf = jnp.where(mask, lf, -jnp.inf)
+    return jnp.argmax(lf, axis=-1).astype(jnp.int32)

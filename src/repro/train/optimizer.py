@@ -1,0 +1,98 @@
+"""AdamW with optional bf16-compressed gradient reduction + error feedback.
+
+Hand-rolled (no optax dependency).  Optimizer moments are f32 regardless of
+param dtype; ZeRO-1 sharding of the moments comes from the launcher's
+out_shardings (parallel/sharding.opt_state_specs), so the update math here
+stays sharding-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # gradient compression: "none" | "bf16_ef" (bf16 reduce + error feedback)
+    compression: str = "none"
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+    if cfg.compression == "bf16_ef":
+        state["err"] = jax.tree.map(zeros, params)
+    return state
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(params, grads, opt_state, step, cfg: AdamWConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    if cfg.compression == "bf16_ef":
+        # error-feedback: quantise (g + carried error) to bf16; the carried
+        # residual keeps the update unbiased over steps.  The bf16 cast sits
+        # at the DP-reduction boundary, halving gradient collective bytes.
+        err = opt_state["err"]
+        g_comp = jax.tree.map(lambda g, e: (g + e).astype(jnp.bfloat16), grads, err)
+        new_err = jax.tree.map(lambda g, e, q: g + e - q.astype(jnp.float32),
+                               grads, err, g_comp)
+        grads = jax.tree.map(lambda q: q.astype(jnp.float32), g_comp)
+    else:
+        new_err = None
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else 1.0
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    lr = lr_schedule(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m_new / bc1
+        vh = v_new / bc2
+        step_val = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step_val = step_val + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step_val
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_params = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    new_state = {"m": new_m, "v": new_v}
+    if new_err is not None:
+        new_state["err"] = new_err
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,86 @@
+"""Adaptive cross approximation (paper §2.4 / Alg. 2) correctness."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aca import aca_adaptive, aca_fixed_rank, batched_aca
+from repro.core.geometry import gaussian_kernel, get_kernel, matern_kernel
+
+
+def _sep_points(rng, m, n, d, gap=2.0):
+    rows = rng.rand(m, d).astype(np.float32)
+    cols = rng.rand(n, d).astype(np.float32) + gap
+    return jnp.asarray(rows), jnp.asarray(cols)
+
+
+@pytest.mark.parametrize("kernel", ["gaussian", "matern"])
+def test_aca_error_decays_with_rank(kernel, rng):
+    rows, cols = _sep_points(rng, 64, 64, 2)
+    kfn = get_kernel(kernel)
+    a = kfn(rows, cols)
+    errs = []
+    for k in (1, 2, 4, 12):
+        u, v = aca_fixed_rank(rows, cols, kfn, k)
+        errs.append(float(jnp.linalg.norm(a - u @ v.T) / jnp.linalg.norm(a)))
+    assert errs[-1] < 1e-4
+    assert errs == sorted(errs, reverse=True) or errs[-1] < errs[0] * 1e-2
+
+
+def test_aca_exact_on_low_rank_block(rng):
+    """A rank-r kernel-free matrix must be reproduced exactly at rank r."""
+    r = 3
+    u0 = rng.randn(40, r).astype(np.float32)
+    v0 = rng.randn(30, r).astype(np.float32)
+    a = jnp.asarray(u0 @ v0.T)
+
+    def matrix_kernel(y, yp):
+        # "kernel" that ignores coordinates and indexes the matrix
+        i = jnp.round(y[..., 0]).astype(jnp.int32)
+        j = jnp.round(yp[..., 0]).astype(jnp.int32)
+        return a[i][:, j] if a.ndim == 2 else a
+
+    rows = jnp.arange(40, dtype=jnp.float32)[:, None]
+    cols = jnp.arange(30, dtype=jnp.float32)[:, None]
+    u, v = aca_fixed_rank(rows, cols, matrix_kernel, r + 2)
+    err = float(jnp.max(jnp.abs(a - u @ v.T)))
+    assert err < 1e-4
+
+
+def test_batched_matches_single(rng):
+    rows = jnp.asarray(rng.rand(4, 48, 2).astype(np.float32))
+    cols = jnp.asarray(rng.rand(4, 48, 2).astype(np.float32) + 2.0)
+    ub, vb = batched_aca(rows, cols, gaussian_kernel, 6)
+    for b in range(4):
+        u, v = aca_fixed_rank(rows[b], cols[b], gaussian_kernel, 6)
+        np.testing.assert_allclose(np.asarray(ub[b] @ vb[b].T),
+                                   np.asarray(u @ v.T), atol=1e-5)
+
+
+def test_adaptive_aca_stopping(rng):
+    rows, cols = _sep_points(rng, 60, 60, 2)
+    a = np.asarray(gaussian_kernel(rows, cols))
+    u, v, rank = aca_adaptive(a, eps=1e-6, k_max=40)
+    assert rank < 40                      # converged before the cap
+    err = np.linalg.norm(a - u @ v.T) / np.linalg.norm(a)
+    assert err < 1e-5
+
+
+def test_degenerate_zero_block():
+    """All-zero block: ACA must return zeros, not NaNs."""
+    rows = jnp.zeros((16, 2), jnp.float32)
+    cols = jnp.zeros((16, 2), jnp.float32)
+    zero_kernel = lambda y, yp: jnp.zeros((y.shape[0], yp.shape[0]), jnp.float32)
+    u, v = aca_fixed_rank(rows, cols, zero_kernel, 4)
+    assert bool(jnp.all(jnp.isfinite(u))) and bool(jnp.all(u == 0))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 3))
+def test_aca_property_separated_clusters_low_error(seed, d):
+    rng = np.random.RandomState(seed)
+    rows, cols = _sep_points(rng, 32, 32, d, gap=1.5)
+    a = gaussian_kernel(rows, cols)
+    u, v = aca_fixed_rank(rows, cols, gaussian_kernel, 12)
+    err = float(jnp.linalg.norm(a - u @ v.T) / (jnp.linalg.norm(a) + 1e-30))
+    assert err < 1e-2

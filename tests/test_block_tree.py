@@ -1,0 +1,64 @@
+"""Block cluster tree (paper §2.3 / Alg. 1): exact tiling + admissibility."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.admissibility import admissible, diam, dist
+from repro.core.block_tree import build_block_tree
+from repro.core.clustering import build_cluster_tree
+from repro.core.geometry import halton
+
+
+def test_diam_dist_basics():
+    a_min = jnp.asarray([0.0, 0.0]); a_max = jnp.asarray([1.0, 1.0])
+    b_min = jnp.asarray([2.0, 0.0]); b_max = jnp.asarray([3.0, 1.0])
+    assert float(diam(a_min, a_max)) == np.sqrt(2.0).astype(np.float32)
+    assert abs(float(dist(a_min, a_max, b_min, b_max)) - 1.0) < 1e-6
+    assert float(dist(a_min, a_max, a_min, a_max)) == 0.0  # overlap
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(100, 900), st.sampled_from([32, 64]),
+       st.sampled_from([0.5, 1.0, 1.5, 2.5]), st.integers(2, 3))
+def test_partition_tiles_exactly(n, c_leaf, eta, d):
+    """The leaves of the block cluster tree tile I_pad x I_pad exactly once
+    — the core structural invariant of the whole method."""
+    tree = build_cluster_tree(halton(n, d), c_leaf=c_leaf)
+    plan = build_block_tree(tree, eta=eta)
+    assert plan.coverage_check()
+
+
+def test_partition_cellwise_exact():
+    """Brute-force: mark every (i, j) cell; each must be covered once."""
+    tree = build_cluster_tree(halton(130, 2), c_leaf=16)
+    plan = build_block_tree(tree, eta=1.2)
+    n = tree.n_pad
+    cov = np.zeros((n, n), np.int32)
+    for lvl, blocks in plan.aca_levels.items():
+        m = n >> lvl
+        for r, c in np.asarray(blocks):
+            cov[r * m:(r + 1) * m, c * m:(c + 1) * m] += 1
+    for r, c in plan.dense_blocks:
+        cl = plan.c_leaf
+        cov[r * cl:(r + 1) * cl, c * cl:(c + 1) * cl] += 1
+    assert (cov == 1).all()
+
+
+def test_admissible_blocks_satisfy_condition():
+    tree = build_cluster_tree(halton(600, 2), c_leaf=32)
+    eta = 1.5
+    plan = build_block_tree(tree, eta=eta)
+    for lvl, blocks in plan.aca_levels.items():
+        bb_min, bb_max = tree.bb_min[lvl], tree.bb_max[lvl]
+        r = jnp.asarray(blocks[:, 0]); c = jnp.asarray(blocks[:, 1])
+        adm = admissible(bb_min[r], bb_max[r], bb_min[c], bb_max[c], eta)
+        assert bool(jnp.all(adm))
+
+
+def test_diagonal_blocks_are_dense():
+    """Diagonal leaf blocks can never be admissible (dist == 0)."""
+    tree = build_cluster_tree(halton(500, 2), c_leaf=32)
+    plan = build_block_tree(tree, eta=1.5)
+    dense = set(map(tuple, plan.dense_blocks.tolist()))
+    for i in range(tree.num_clusters(tree.n_levels)):
+        assert (i, i) in dense

@@ -1,0 +1,86 @@
+"""H-matrix attention (the paper's technique in the LM stack)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.hattention import (_plan_coverage, aca_bilinear,
+                                   causal_hmatrix_plan, h_attention)
+
+
+@pytest.mark.parametrize("seq,c_leaf", [(256, 32), (512, 64), (1024, 64)])
+def test_plan_covers_causal_triangle_exactly(seq, c_leaf):
+    cov = _plan_coverage(seq, c_leaf)
+    tri = np.tril(np.ones((seq, seq), np.int32))
+    assert (cov == tri).all()
+
+
+def test_aca_bilinear_low_rank_block(rng):
+    """Smooth q/k (slow positional variation) -> far-field block is
+    numerically low-rank; ACA must capture it."""
+    R = C = 64
+    t_r = np.linspace(2.0, 3.0, R)[:, None]
+    t_c = np.linspace(0.0, 1.0, C)[:, None]
+    q = jnp.asarray(np.concatenate([np.sin(t_r), np.cos(t_r), t_r * 0.1], 1), jnp.float32)
+    k = jnp.asarray(np.concatenate([np.sin(t_c), np.cos(t_c), t_c * 0.1], 1), jnp.float32)
+    m = jnp.zeros((R,), jnp.float32)
+    u, v = aca_bilinear(q, m, k, rank=8)
+    a = jnp.exp(jnp.clip(q @ k.T, -30, 30))
+    err = float(jnp.max(jnp.abs(a - u @ v.T)) / jnp.max(a))
+    assert err < 1e-3
+
+
+def _smooth_qkv(rng, b, s, h, hkv, d):
+    """q/k as smooth functions of position => smooth attention landscape."""
+    t = np.linspace(0, 4 * np.pi, s)
+    feats = np.stack([np.sin(t * (i + 1) / d) for i in range(d)], -1)
+    q = np.tile(feats[None, :, None, :], (b, 1, h, 1)) * 2.0
+    k = np.tile(feats[None, :, None, :], (b, 1, hkv, 1)) * 2.0
+    q = q + 0.01 * rng.randn(*q.shape)
+    k = k + 0.01 * rng.randn(*k.shape)
+    v = rng.randn(b, s, hkv, d)
+    return (jnp.asarray(q, jnp.float32), jnp.asarray(k, jnp.float32),
+            jnp.asarray(v, jnp.float32))
+
+
+def _full_attention(q, k, v):
+    b, s, h, d = q.shape
+    hkv = k.shape[2]; g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, s, hkv, g, d) / jnp.sqrt(d)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d)
+
+
+def test_h_attention_close_to_full_on_smooth_scores(rng):
+    q, k, v = _smooth_qkv(rng, 1, 512, 2, 1, 16)
+    out_h = h_attention(q, k, v, c_leaf=64, rank=12)
+    out_f = _full_attention(q, k, v)
+    rel = float(jnp.linalg.norm(out_h - out_f) / jnp.linalg.norm(out_f))
+    assert rel < 0.05
+
+
+def test_h_attention_exact_region_matches(rng):
+    """Rows < 2*c_leaf only touch dense blocks -> must match full attention
+    almost exactly regardless of score smoothness."""
+    q = jnp.asarray(rng.randn(1, 256, 2, 16), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 256, 1, 16), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 256, 1, 16), jnp.float32)
+    out_h = h_attention(q, k, v, c_leaf=64, rank=8)
+    out_f = _full_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(out_h[:, :128]),
+                               np.asarray(out_f[:, :128]), atol=1e-3)
+
+
+def test_h_attention_differentiable(rng):
+    q, k, v = _smooth_qkv(rng, 1, 256, 2, 2, 8)
+
+    def loss(q, k, v):
+        return (h_attention(q, k, v, c_leaf=64, rank=4) ** 2).sum()
+
+    g = jax.grad(loss, argnums=(0, 1, 2))(q, k, v)
+    for t in g:
+        assert bool(jnp.all(jnp.isfinite(t)))

@@ -1,0 +1,87 @@
+"""End-to-end H-matrix tests: matvec vs dense oracle (paper §6.4 claims)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (build_hmatrix, dense_matvec_oracle, halton, make_matvec)
+
+
+@pytest.mark.parametrize("kernel,d", [("gaussian", 2), ("gaussian", 3),
+                                      ("matern", 2), ("matern", 3)])
+def test_hmatvec_close_to_dense(kernel, d, rng):
+    n = 1500
+    pts = halton(n, d)
+    x = jnp.asarray(rng.randn(n).astype(np.float32))
+    z_ref = dense_matvec_oracle(pts, kernel, x)
+    hm = build_hmatrix(pts, kernel, k=14, c_leaf=128, eta=1.5)
+    z = make_matvec(hm)(x)
+    rel = float(jnp.linalg.norm(z - z_ref) / jnp.linalg.norm(z_ref))
+    assert rel < 5e-5
+
+
+def test_exponential_convergence_in_rank(rng):
+    """Paper Fig 11: error decays exponentially in the ACA rank."""
+    pts = halton(2048, 2)
+    x = jnp.asarray(rng.randn(2048).astype(np.float32))
+    z_ref = dense_matvec_oracle(pts, "gaussian", x)
+    errs = []
+    for k in (2, 4, 8):
+        hm = build_hmatrix(pts, "gaussian", k=k, c_leaf=128)
+        z = make_matvec(hm)(x)
+        errs.append(float(jnp.linalg.norm(z - z_ref) / jnp.linalg.norm(z_ref)))
+    # each rank doubling gains at least ~8x accuracy until the f32 floor
+    assert errs[1] < errs[0] / 8 and errs[2] < errs[1] / 8
+
+
+def test_precompute_matches_recompute(rng):
+    pts = halton(1024, 2)
+    x = jnp.asarray(rng.randn(1024).astype(np.float32))
+    hm_np = build_hmatrix(pts, "gaussian", k=8, c_leaf=128, precompute=False)
+    hm_p = build_hmatrix(pts, "gaussian", k=8, c_leaf=128, precompute=True)
+    z1 = make_matvec(hm_np)(x)
+    z2 = make_matvec(hm_p)(x)
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), atol=1e-5)
+
+
+def test_pallas_path_matches_jnp(rng):
+    """Both paths approximate the SAME dense operator; ACA pivot ties may
+    differ between implementations, so compare each against the oracle."""
+    pts = halton(1200, 2)
+    x = jnp.asarray(rng.randn(1200).astype(np.float32))
+    z_ref = dense_matvec_oracle(pts, "gaussian", x)
+    hm = build_hmatrix(pts, "gaussian", k=10, c_leaf=128)
+    for use_pallas in (False, True):
+        z = make_matvec(hm, use_pallas=use_pallas)(x)
+        rel = float(jnp.linalg.norm(z - z_ref) / jnp.linalg.norm(z_ref))
+        assert rel < 5e-5, (use_pallas, rel)
+
+
+def test_matvec_linearity(rng):
+    pts = halton(1024, 2)
+    hm = build_hmatrix(pts, "gaussian", k=8, c_leaf=128, precompute=True)
+    mv = make_matvec(hm)
+    x = jnp.asarray(rng.randn(1024).astype(np.float32))
+    y = jnp.asarray(rng.randn(1024).astype(np.float32))
+    lhs = mv(2.0 * x + 3.0 * y)
+    rhs = 2.0 * mv(x) + 3.0 * mv(y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), atol=1e-3)
+
+
+def test_memory_report_compression(rng):
+    pts = halton(4096, 2)
+    hm = build_hmatrix(pts, "gaussian", k=8, c_leaf=128, precompute=True)
+    rep = hm.memory_report()
+    # the H-matrix factors must be far smaller than the dense matrix
+    assert rep["factor_bytes"] < 0.2 * rep["dense_equivalent_bytes"]
+
+
+def test_non_pow2_n(rng):
+    """Padding path: N not a power of two."""
+    n = 1000
+    pts = halton(n, 2)
+    x = jnp.asarray(rng.randn(n).astype(np.float32))
+    hm = build_hmatrix(pts, "gaussian", k=10, c_leaf=128)
+    z = make_matvec(hm)(x)
+    z_ref = dense_matvec_oracle(pts, "gaussian", x)
+    rel = float(jnp.linalg.norm(z - z_ref) / jnp.linalg.norm(z_ref))
+    assert rel < 5e-4

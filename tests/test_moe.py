@@ -1,0 +1,72 @@
+"""MoE dispatch (the paper's count->scan->compact pattern) correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_smoke
+from repro.models.moe import make_moe_params, moe_block, router_aux_loss
+
+
+def _cfg(num_experts=4, topk=2):
+    return get_smoke("granite-moe-1b-a400m").replace(
+        dtype="float32", num_experts=num_experts, experts_per_token=topk)
+
+
+def test_moe_output_finite_and_shaped(rng):
+    cfg = _cfg()
+    p = make_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(2, 16, cfg.d_model).astype(np.float32))
+    y = moe_block(p, cfg, x)
+    assert y.shape == x.shape and bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_single_expert_equals_dense(rng):
+    """num_experts=1, top-1, generous capacity: MoE == that expert's MLP."""
+    cfg = _cfg(num_experts=1, topk=1)
+    p = make_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(1, 8, cfg.d_model).astype(np.float32))
+    y = moe_block(p, cfg, x, capacity_factor=4.0)
+    ref = (jax.nn.silu(x @ p["wg"][0]) * (x @ p["wu"][0])) @ p["wd"][0]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+
+def test_moe_capacity_dropping_bounded(rng):
+    """With capacity factor ~0, everything drops -> output ~ 0 (graceful)."""
+    cfg = _cfg()
+    p = make_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(1, 32, cfg.d_model).astype(np.float32))
+    y = moe_block(p, cfg, x, capacity_factor=1e-9)
+    assert float(jnp.abs(y).max()) < 10.0  # at most `cap=1` slots contribute
+
+
+def test_moe_gate_normalisation(rng):
+    """Scaling one expert's output weights scales only its share."""
+    cfg = _cfg(num_experts=2, topk=2)
+    p = make_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(1, 4, cfg.d_model).astype(np.float32))
+    y1 = moe_block(p, cfg, x, capacity_factor=8.0)
+    p2 = jax.tree.map(lambda a: a, p)
+    p2["wd"] = p["wd"].at[0].multiply(0.0)
+    y2 = moe_block(p2, cfg, x, capacity_factor=8.0)
+    assert float(jnp.abs(y1 - y2).max()) > 0  # expert 0 contributed
+
+
+def test_router_aux_loss_positive(rng):
+    cfg = _cfg()
+    p = make_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(2, 16, cfg.d_model).astype(np.float32))
+    aux = router_aux_loss(p, cfg, x)
+    assert float(aux) > 0.0
+
+
+def test_moe_differentiable(rng):
+    cfg = _cfg()
+    p = make_moe_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.randn(1, 8, cfg.d_model).astype(np.float32))
+
+    def loss(p):
+        return (moe_block(p, cfg, x) ** 2).sum()
+
+    g = jax.grad(loss)(p)
+    assert all(bool(jnp.all(jnp.isfinite(t))) for t in jax.tree.leaves(g))
+    assert float(jnp.abs(g["router"]).max()) > 0  # router receives gradient

@@ -1,0 +1,64 @@
+"""Morton/Z-order curve tests (paper §4.4) — unit + property + kernel oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.morton import bits_per_dim, morton_encode, morton_order, quantize
+from repro.kernels.morton.ops import morton_encode_pallas
+from repro.kernels.morton.ref import morton_encode_ref
+
+
+def test_bits_per_dim():
+    assert bits_per_dim(2) == 31
+    assert bits_per_dim(3) == 21
+    assert bits_per_dim(1) == 32
+
+
+def test_quantize_bounds():
+    pts = jnp.asarray([[0.0, 1.0], [0.5, -3.0], [2.0, 0.25]], jnp.float32)
+    q = quantize(pts, 8)
+    assert int(q.max()) <= 255 and int(q.min()) >= 0
+    assert int(q[0, 1]) == 255 and int(q[1, 1]) == 0
+
+
+def test_known_interleave_2d():
+    # point (1.0, 0.0) -> x bits all ones, y zero; x occupies even positions
+    pts = jnp.asarray([[1.0, 0.0]], jnp.float32)
+    hi, lo = morton_encode(pts)
+    code = (int(hi[0]) << 32) | int(lo[0])
+    nb = bits_per_dim(2)
+    expected = sum(1 << (2 * b) for b in range(nb))
+    assert code == expected
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(50, 300), st.integers(2, 3), st.integers(0, 2**31 - 1))
+def test_morton_locality_property(n, d, seed):
+    """Sorting by Morton code brings consecutive points spatially close:
+    the mean consecutive-pair distance after sorting must beat the
+    expected random-order distance (averaged over shuffles — a single
+    permutation is too noisy a baseline for small n)."""
+    rs = np.random.RandomState(seed)
+    pts = rs.rand(n, d).astype(np.float32)
+    order = np.asarray(morton_order(jnp.asarray(pts)))
+    sorted_d = np.linalg.norm(np.diff(pts[order], axis=0), axis=1).mean()
+    rand_ds = []
+    for _ in range(5):
+        perm = rs.permutation(n)
+        rand_ds.append(np.linalg.norm(np.diff(pts[perm], axis=0), axis=1).mean())
+    assert sorted_d <= np.mean(rand_ds) * 0.9
+
+
+@pytest.mark.parametrize("n,d", [(100, 2), (1024, 2), (1500, 3), (2048, 3)])
+def test_morton_kernel_matches_ref(n, d, rng):
+    pts = jnp.asarray(rng.rand(n, d).astype(np.float32))
+    hi, lo = morton_encode_pallas(pts)
+    hir, lor = morton_encode_ref(pts)
+    assert bool(jnp.all(hi == hir)) and bool(jnp.all(lo == lor))
+
+
+def test_morton_order_is_permutation(rng):
+    pts = jnp.asarray(rng.rand(333, 2).astype(np.float32))
+    order = np.asarray(morton_order(pts))
+    assert sorted(order.tolist()) == list(range(333))

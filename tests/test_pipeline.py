@@ -1,0 +1,35 @@
+"""GPipe pipeline-parallel utility — subprocess test (needs 4 devices)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    from repro.parallel.mesh_ctx import use_mesh
+    from repro.parallel.pipeline import pipeline_apply
+    mesh = jax.make_mesh((4,), ("stage",))
+    with use_mesh(mesh):
+        S, NM, MB, D = 4, 6, 2, 8
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (S, D, D)) * 0.3
+        xs = jax.random.normal(key, (NM, MB, D))
+        stage_fn = lambda p, x: jnp.tanh(x @ p)
+        out = pipeline_apply(w, xs, axis="stage", n_stages=S, stage_fn=stage_fn)
+        ref = xs
+        for i in range(S):
+            ref = jnp.tanh(ref @ w[i])
+        err = float(jnp.max(jnp.abs(out - ref)))
+        assert err < 1e-6, err
+    print("PIPELINE_OK")
+""")
+
+
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=560)
+    assert "PIPELINE_OK" in out.stdout, out.stdout + "\n" + out.stderr

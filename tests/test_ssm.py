@@ -1,0 +1,87 @@
+"""SSM block correctness: chunked-parallel forms == sequential recurrences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.mamba2 import ssd_chunked, ssd_step
+from repro.models.xlstm import mlstm_chunked, mlstm_step
+
+
+def test_ssd_chunked_matches_recurrence(rng):
+    b, s, h, p, n = 2, 64, 3, 8, 16
+    x = jnp.asarray(rng.randn(b, s, h, p).astype(np.float32) * 0.5)
+    dt = jnp.asarray(rng.rand(b, s, h).astype(np.float32) * 0.5 + 0.1)
+    a_log = jnp.asarray(rng.randn(h).astype(np.float32) * 0.3)
+    b_mat = jnp.asarray(rng.randn(b, s, n).astype(np.float32) * 0.5)
+    c_mat = jnp.asarray(rng.randn(b, s, n).astype(np.float32) * 0.5)
+    d_skip = jnp.asarray(rng.randn(h).astype(np.float32))
+
+    y_chunk, state_chunk = ssd_chunked(x, dt, a_log, b_mat, c_mat, d_skip, chunk=16)
+
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y_t, state = ssd_step(state, x[:, t], dt[:, t], a_log,
+                              b_mat[:, t], c_mat[:, t], d_skip)
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(state_chunk), np.asarray(state),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunk_size_invariance(rng):
+    b, s, h, p, n = 1, 64, 2, 4, 8
+    x = jnp.asarray(rng.randn(b, s, h, p).astype(np.float32))
+    dt = jnp.asarray(rng.rand(b, s, h).astype(np.float32) * 0.3 + 0.05)
+    a_log = jnp.zeros((h,), jnp.float32)
+    bm = jnp.asarray(rng.randn(b, s, n).astype(np.float32))
+    cm = jnp.asarray(rng.randn(b, s, n).astype(np.float32))
+    d = jnp.zeros((h,), jnp.float32)
+    y16, _ = ssd_chunked(x, dt, a_log, bm, cm, d, chunk=16)
+    y64, _ = ssd_chunked(x, dt, a_log, bm, cm, d, chunk=64)
+    np.testing.assert_allclose(np.asarray(y16), np.asarray(y64),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_mlstm_chunked_matches_recurrence(rng):
+    b, s, h, d = 2, 32, 2, 8
+    q = jnp.asarray(rng.randn(b, s, h, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(b, s, h, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, s, h, d).astype(np.float32))
+    i_pre = jnp.asarray(rng.randn(b, s, h).astype(np.float32))
+    f_pre = jnp.asarray(rng.randn(b, s, h).astype(np.float32) + 2.0)
+
+    y_chunk, (c_c, n_c, m_c) = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=8)
+
+    state = (jnp.zeros((b, h, d, d), jnp.float32),
+             jnp.zeros((b, h, d), jnp.float32),
+             jnp.full((b, h), -1e30, jnp.float32))
+    ys = []
+    for t in range(s):
+        y_t, state = mlstm_step(state, q[:, t], k[:, t], v[:, t],
+                                i_pre[:, t], f_pre[:, t])
+        ys.append(y_t)
+    y_seq = jnp.stack(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+    # final state must agree up to the stabiliser convention: compare C/n
+    # rescaled by exp(m) is unstable; instead check a probe product q.C
+    probe = jnp.asarray(rng.randn(b, h, d).astype(np.float32))
+    o1 = jnp.einsum("bhd,bhde->bhe", probe, c_c) * jnp.exp(m_c)[..., None]
+    o2 = jnp.einsum("bhd,bhde->bhe", probe, state[0]) * jnp.exp(state[2])[..., None]
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=2e-3, atol=2e-3)
+
+
+def test_mlstm_stability_long_sequence(rng):
+    """Exponential gating must not overflow on long sequences."""
+    b, s, h, d = 1, 512, 2, 8
+    q = jnp.asarray(rng.randn(b, s, h, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(b, s, h, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, s, h, d).astype(np.float32))
+    i_pre = jnp.asarray(rng.randn(b, s, h).astype(np.float32) * 5.0)
+    f_pre = jnp.asarray(rng.randn(b, s, h).astype(np.float32) * 5.0)
+    y, _ = mlstm_chunked(q, k, v, i_pre, f_pre, chunk=64)
+    assert bool(jnp.all(jnp.isfinite(y)))

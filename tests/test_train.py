@@ -1,0 +1,105 @@
+"""Training loop semantics: loss decreases, microbatch equivalence, compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke
+from repro.data.pipeline import DataConfig, make_batch
+from repro.train.optimizer import AdamWConfig, apply_updates, init_opt_state, lr_schedule
+from repro.train.step import make_train_step
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(lr_schedule(cfg, jnp.asarray(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1e-3) < 1e-9          # peak at end of warmup
+    assert lrs[3] < lrs[2] and lrs[4] < lrs[3]  # cosine decay
+
+
+def test_loss_decreases_smollm_smoke():
+    cfg = get_smoke("smollm-135m").replace(dtype="float32")
+    init_state, train_step = make_train_step(
+        cfg, AdamWConfig(lr=1e-2, warmup_steps=2, total_steps=200,
+                         weight_decay=0.0), microbatches=1)
+    step_fn = jax.jit(train_step)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8, seed=0)
+    state = init_state(jax.random.PRNGKey(0))
+    losses = []
+    for step in range(40):
+        b = make_batch(dcfg, step)
+        state, m = step_fn(state, {"tokens": b["tokens"], "labels": b["labels"]})
+        losses.append(float(m["loss"]))
+    # the synthetic stream carries ~0.5 nats of learnable structure (motif
+    # copying); require the model to capture most of it
+    assert np.mean(losses[-5:]) < losses[0] - 0.4, losses
+
+
+def test_microbatch_grad_equivalence():
+    """Same batch, microbatches=1 vs 4 -> same updated params (linearity of
+    gradient accumulation)."""
+    cfg = get_smoke("qwen2.5-14b").replace(dtype="float32")
+    opt = AdamWConfig(warmup_steps=1, total_steps=10, grad_clip=0.0)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=8, seed=1)
+    batch = make_batch(dcfg, 0)
+    batch = {"tokens": batch["tokens"], "labels": batch["labels"]}
+
+    outs = []
+    for mb in (1, 4):
+        init_state, train_step = make_train_step(cfg, opt, microbatches=mb)
+        state = init_state(jax.random.PRNGKey(0))
+        state, _ = jax.jit(train_step)(state, batch)
+        outs.append(jax.tree.leaves(state["params"]))
+    for a, b in zip(*outs):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_adamw_moves_toward_minimum():
+    params = {"w": jnp.asarray([4.0, -2.0])}
+    opt_cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=1000,
+                          weight_decay=0.0, grad_clip=0.0)
+    opt = init_opt_state(params, opt_cfg)
+    for step in range(200):
+        grads = {"w": 2.0 * params["w"]}  # d/dw of w^2
+        params, opt, _ = apply_updates(params, grads, opt,
+                                       jnp.asarray(step), opt_cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_bf16_error_feedback_compression_converges():
+    """bf16 gradient compression with error feedback reaches the same
+    neighbourhood as uncompressed AdamW."""
+    def run(compression):
+        params = {"w": jnp.linspace(-1, 1, 64)}
+        opt_cfg = AdamWConfig(lr=0.05, warmup_steps=0, total_steps=2000,
+                              weight_decay=0.0, grad_clip=0.0,
+                              compression=compression)
+        opt = init_opt_state(params, opt_cfg)
+        for step in range(300):
+            grads = {"w": 2.0 * params["w"] + 0.001}
+            params, opt, _ = apply_updates(params, grads, opt,
+                                           jnp.asarray(step), opt_cfg)
+        return float(jnp.abs(params["w"] + 0.0005).max())
+
+    assert run("bf16_ef") < 0.05
+    assert abs(run("bf16_ef") - run("none")) < 0.05
+
+
+def test_grad_clipping_metric():
+    cfg = get_smoke("smollm-135m").replace(dtype="float32")
+    init_state, train_step = make_train_step(
+        cfg, AdamWConfig(grad_clip=1e-9, warmup_steps=0, total_steps=10),
+        microbatches=1)
+    state = init_state(jax.random.PRNGKey(0))
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2, seed=0)
+    b = make_batch(dcfg, 0)
+    before = jax.tree.map(np.asarray, state["params"])
+    state, m = jax.jit(train_step)(state, {"tokens": b["tokens"], "labels": b["labels"]})
+    # with a near-zero clip the params barely move
+    delta = max(float(np.abs(np.asarray(a) - bb).max())
+                for a, bb in zip(jax.tree.leaves(state["params"]),
+                                 jax.tree.leaves(before)))
+    assert delta < 1e-3
+    assert float(m["grad_norm"]) > 0
