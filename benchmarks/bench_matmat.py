@@ -1,0 +1,66 @@
+"""Multi-RHS H-matrix application: amortized per-RHS cost vs R.
+
+Sweeps R in {1, 8, 64}: one batched ``make_apply`` matmat over an (N, R)
+panel vs a loop of R single-RHS matvecs (the pre-batching serving path).
+Emits the usual CSV rows and writes one JSON record per R into
+``results/matmat/`` (the bench JSON format the roofline tooling reads
+records from).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_hmatrix, halton, make_apply
+
+from .common import emit, timeit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "matmat")
+
+
+def run(n: int = 8192, c_leaf: int = 128, k: int = 16,
+        rs: tuple = (1, 8, 64), precompute: bool = True,
+        use_pallas: bool = False) -> dict:
+    rng = np.random.RandomState(0)
+    pts = halton(n, 2)
+    hm = build_hmatrix(pts, "gaussian", k=k, c_leaf=c_leaf,
+                       precompute=precompute)
+    apply_fn = make_apply(hm, use_pallas=use_pallas)
+
+    os.makedirs(RESULTS, exist_ok=True)
+    speedups = {}
+    for r in rs:
+        X = jnp.asarray(rng.randn(n, r).astype(np.float32))
+        t_mm = timeit(apply_fn, X)
+
+        def loop_mv(X):
+            outs = [apply_fn(X[:, j]) for j in range(r)]
+            return outs[-1]
+
+        # same iters as the matmat path: timeit takes the median, and a
+        # 2-sample "median" is the max — that would bias the speedup up
+        t_loop = timeit(loop_mv, X, warmup=1, iters=3)
+        per_rhs_mm = t_mm / r
+        per_rhs_loop = t_loop / r
+        speedup = t_loop / t_mm
+        speedups[r] = speedup
+        emit(f"matmat_R{r}", t_mm,
+             f"per_rhs_us={per_rhs_mm * 1e6:.1f};"
+             f"loop_per_rhs_us={per_rhs_loop * 1e6:.1f};"
+             f"speedup_x{speedup:.1f}")
+        rec = {"bench": "matmat", "n": n, "c_leaf": c_leaf, "k": k, "r": r,
+               "precompute": precompute, "use_pallas": use_pallas,
+               "t_matmat_s": t_mm, "t_loop_s": t_loop,
+               "per_rhs_matmat_us": per_rhs_mm * 1e6,
+               "per_rhs_loop_us": per_rhs_loop * 1e6,
+               "amortized_speedup": speedup}
+        with open(os.path.join(RESULTS, f"matmat_R{r}.json"), "w") as f:
+            json.dump(rec, f, indent=2)
+    return speedups
+
+
+if __name__ == "__main__":
+    run()

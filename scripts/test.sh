@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
+#   scripts/test.sh            full tier-1 run
+#   scripts/test.sh --fast     smoke loop (-m "not slow", stays under ~2 min)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--fast" ]]; then
+    shift
+    exec python -m pytest -x -q -m "not slow" "$@"
+fi
+exec python -m pytest -x -q "$@"

@@ -6,7 +6,9 @@ Public API:
     build_cluster_tree                           (CBC clustering, §2.1)
     build_block_tree, HMatrixPlan                (block cluster tree, §2.3/§4.1)
     aca_fixed_rank, batched_aca                  (ACA, §2.4/§5.4.1)
-    build_hmatrix, make_matvec, HMatrix          (assembly + fast matvec, §2.5)
+    build_hmatrix, make_apply, make_matvec,
+    HMatrix                                      (assembly + fast batched
+                                                  application, §2.5/§5.4)
     h_attention                                  (the technique inside the LM stack)
 """
 from .geometry import halton, get_kernel, dense_kernel_matrix, gaussian_kernel, matern_kernel
@@ -15,7 +17,8 @@ from .clustering import ClusterTree, build_cluster_tree, permute_to_tree, permut
 from .admissibility import admissible, diam, dist
 from .block_tree import HMatrixPlan, build_block_tree
 from .aca import aca_fixed_rank, batched_aca, aca_adaptive
-from .hmatrix import HMatrix, build_hmatrix, make_matvec, dense_matvec_oracle, compute_factors
+from .hmatrix import (HMatrix, build_hmatrix, make_apply, make_matvec,
+                      dense_matvec_oracle, compute_factors)
 
 __all__ = [
     "halton", "get_kernel", "dense_kernel_matrix", "gaussian_kernel", "matern_kernel",
@@ -24,5 +27,6 @@ __all__ = [
     "admissible", "diam", "dist",
     "HMatrixPlan", "build_block_tree",
     "aca_fixed_rank", "batched_aca", "aca_adaptive",
-    "HMatrix", "build_hmatrix", "make_matvec", "dense_matvec_oracle", "compute_factors",
+    "HMatrix", "build_hmatrix", "make_apply", "make_matvec",
+    "dense_matvec_oracle", "compute_factors",
 ]

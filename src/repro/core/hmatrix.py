@@ -1,16 +1,23 @@
-"""H-matrix assembly and fast matvec (paper §2.5, §5.4, Algorithm 3).
+"""H-matrix assembly and fast application (paper §2.5, §5.4, Algorithm 3).
 
 ``build_hmatrix`` constructs the cluster tree + block cluster tree and
-(optionally) precomputes the ACA factors (paper's *P* mode).  ``make_matvec``
-returns a jitted function computing ``z = H x`` by
+(optionally) precomputes the ACA factors (paper's *P* mode).  ``make_apply``
+returns a jitted batched executor computing ``Z = H X`` for a single vector
+``x: (N,)`` or a multi-RHS panel ``X: (N, R)`` in ONE device-wide program:
 
-  * batched rank-k products for every admissible level-group (§5.4.1), and
+  * batched rank-k products for every admissible level-group (§5.4.1) —
+    in matmat form ``U (V^T X)``: two (B, m, k) x (B, k, R) contractions;
   * batched on-the-fly dense kernel-block products for the inadmissible
-    leaves (§5.4.2 — dense blocks are *never* precomputed, as in the paper).
+    leaves (§5.4.2 — dense blocks are *never* precomputed, as in the
+    paper), feeding the MXU a (C, C) @ (C, R) contraction per block.
 
-All batch groups have static shapes, so the whole matvec is a single jitted
-program.  Set ``use_pallas=True`` to route the two hot loops through the
+Batching over right-hand sides amortises the per-product kernel
+regeneration (NP mode) and factor streaming (P mode) over all R columns —
+the multi-RHS regime of Boukaram et al. 2019 and Harbrecht & Zaspel 2018.
+All batch groups have static shapes, so the whole application is a single
+jitted program.  Set ``use_pallas=True`` to route the hot loops through the
 Pallas TPU kernels (validated against these jnp paths in tests).
+``make_matvec`` is the single-vector convenience wrapper.
 """
 from __future__ import annotations
 
@@ -84,18 +91,27 @@ def build_hmatrix(coords: jnp.ndarray, kernel: str | Callable = "gaussian",
 
 
 # ---------------------------------------------------------------------------
-# Fast matvec
+# Fast application (single jitted program for x: (N,) and X: (N, R))
 # ---------------------------------------------------------------------------
+#
+# Internally everything is rank-generic: the padded operand is carried as a
+# 2-D (n_pad, R) panel (R == 1 for the matvec case) and every block batch is
+# an (B, m, R) einsum / MXU contraction.
 
 
-def _aca_level_apply(tree, level, blocks, U, V, x_pad, z_pad):
+def _aca_level_apply(tree, level, blocks, U, V, x_pad, z_pad, use_pallas):
     m = tree.n_pad >> level
+    r = x_pad.shape[1]
     rows, cols = jnp.asarray(blocks[:, 0]), jnp.asarray(blocks[:, 1])
-    x_blk = x_pad.reshape(1 << level, m)[cols]                 # (B, m)
-    t = jnp.einsum("bmk,bm->bk", V, x_blk)                     # V^T x
-    y = jnp.einsum("bmk,bk->bm", U, t)                         # U t
-    zl = jnp.zeros((1 << level, m), x_pad.dtype).at[rows].add(y)
-    return z_pad + zl.reshape(-1)
+    x_blk = x_pad.reshape(1 << level, m, r)[cols]              # (B, m, R)
+    if use_pallas:
+        from repro.kernels.batched_aca.ops import batched_lowrank_matmat
+        y = batched_lowrank_matmat(U, V, x_blk)                # U (V^T X)
+    else:
+        t = jnp.einsum("bmk,bmr->bkr", V, x_blk)               # V^T X
+        y = jnp.einsum("bmk,bkr->bmr", U, t)                   # U T
+    zl = jnp.zeros((1 << level, m, r), x_pad.dtype).at[rows].add(y)
+    return z_pad + zl.reshape(-1, r)
 
 
 def _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas):
@@ -103,18 +119,20 @@ def _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas):
     if blocks.shape[0] == 0:
         return z_pad
     c = plan.c_leaf
+    r = x_pad.shape[1]
     n_leaf = plan.n_pad // c
     rows, cols = jnp.asarray(blocks[:, 0]), jnp.asarray(blocks[:, 1])
     pts = points.reshape(n_leaf, c, -1)
-    x_blk = x_pad.reshape(n_leaf, c)[cols]                     # (B, c)
+    x_blk = x_pad.reshape(n_leaf, c, r)[cols]                  # (B, c, R)
     if use_pallas:
-        from repro.kernels.batched_dense_matvec.ops import batched_kernel_matvec
-        y = batched_kernel_matvec(pts[rows], pts[cols], x_blk, tree_kernel_name(kernel))
+        from repro.kernels.batched_dense_matvec.ops import batched_kernel_matmat
+        y = batched_kernel_matmat(pts[rows], pts[cols], x_blk,
+                                  tree_kernel_name(kernel))
     else:
         a = kernel(pts[rows], pts[cols])                       # (B, c, c)
-        y = jnp.einsum("bij,bj->bi", a, x_blk)
-    zl = jnp.zeros((n_leaf, c), x_pad.dtype).at[rows].add(y)
-    return z_pad + zl.reshape(-1)
+        y = jnp.einsum("bij,bjr->bir", a, x_blk)
+    zl = jnp.zeros((n_leaf, c, r), x_pad.dtype).at[rows].add(y)
+    return z_pad + zl.reshape(-1, r)
 
 
 def tree_kernel_name(kernel: Callable) -> str:
@@ -122,8 +140,14 @@ def tree_kernel_name(kernel: Callable) -> str:
     return {"gaussian_kernel": "gaussian", "matern_kernel": "matern"}.get(name, name)
 
 
-def make_matvec(hm: HMatrix, use_pallas: bool = False) -> Callable:
-    """Return jitted ``matvec(x) -> z`` (x, z in the ORIGINAL point order).
+def make_apply(hm: HMatrix, use_pallas: bool = False) -> Callable:
+    """Return jitted ``apply(X) -> Z`` (X, Z in the ORIGINAL point order).
+
+    ``X`` may be a single vector ``(N,)`` or a panel of R right-hand sides
+    ``(N, R)``; the result has the same shape.  One compiled program per
+    distinct R — all per-block work is batched over the R columns, so the
+    ACA regeneration (NP mode) / factor streaming (P mode) cost is paid
+    once for the whole panel instead of once per column.
 
     NP mode (``hm.factors is None``) recomputes the ACA factors inside every
     product; P mode applies the stored factors (paper §5.4 & Fig 13).
@@ -135,9 +159,9 @@ def make_matvec(hm: HMatrix, use_pallas: bool = False) -> Callable:
     tree, plan, kernel, k = hm.tree, hm.plan, hm.kernel, hm.k
 
     @jax.jit
-    def _matvec(points, factors, x):
+    def _apply(points, factors, x):
         tr = tree  # static metadata (shapes/levels); `points` is the data
-        x_pad = permute_to_tree(tr, x)
+        x_pad = permute_to_tree(tr, x)                         # (n_pad, R)
         z_pad = jnp.zeros_like(x_pad)
         for level, blocks in plan.aca_levels.items():
             if factors is not None:
@@ -151,17 +175,33 @@ def make_matvec(hm: HMatrix, use_pallas: bool = False) -> Callable:
                     U, V = batched_aca_pallas(rp, cp, tree_kernel_name(kernel), k)
                 else:
                     U, V = batched_aca(rp, cp, kernel, k)
-            z_pad = _aca_level_apply(tr, level, blocks, U, V, x_pad, z_pad)
+            z_pad = _aca_level_apply(tr, level, blocks, U, V, x_pad, z_pad,
+                                     use_pallas)
         z_pad = _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas)
         return permute_from_tree(tr, z_pad)
 
-    def matvec(x: jnp.ndarray) -> jnp.ndarray:
-        return _matvec(tree.points, hm.factors, x)
+    def apply(x: jnp.ndarray) -> jnp.ndarray:
+        if x.ndim not in (1, 2) or x.shape[0] != tree.n:
+            # explicit check: jnp gather CLAMPS out-of-range permutation
+            # indices, so a wrong-length operand would silently return
+            # garbage instead of erroring
+            raise ValueError(f"operand shape {x.shape} incompatible with "
+                             f"H-matrix of size ({tree.n}, {tree.n})")
+        if x.ndim == 1:
+            return _apply(tree.points, hm.factors, x[:, None])[:, 0]
+        if x.shape[1] == 0:
+            return jnp.zeros_like(x)
+        return _apply(tree.points, hm.factors, x)
 
-    return matvec
+    return apply
+
+
+def make_matvec(hm: HMatrix, use_pallas: bool = False) -> Callable:
+    """Single-vector convenience wrapper over :func:`make_apply`."""
+    return make_apply(hm, use_pallas=use_pallas)
 
 
 def dense_matvec_oracle(coords: jnp.ndarray, kernel: str | Callable, x: jnp.ndarray) -> jnp.ndarray:
-    """O(N^2) oracle for tests/benchmarks."""
+    """O(N^2) oracle for tests/benchmarks (x may be (N,) or (N, R))."""
     kfn = get_kernel(kernel) if isinstance(kernel, str) else kernel
     return kfn(coords, coords) @ x

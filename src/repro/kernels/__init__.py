@@ -1,3 +1,17 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-package helpers."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas ``interpret`` default: compiled on TPU, interpreter elsewhere.
+
+    Every kernel entry point takes ``interpret: bool | None = None`` and
+    resolves ``None`` through this helper, so real hardware runs compiled
+    kernels while CPU tests/CI transparently use the interpreter.
+    """
+    return jax.default_backend() != "tpu"

@@ -1,28 +1,28 @@
-"""jit'd public wrapper for the batched ACA Pallas kernel.
+"""jit'd public wrappers for the batched ACA Pallas kernels.
 
 Implements the paper's ``bs_ACA`` batching-size heuristic for TPU: blocks
 whose VMEM working set would overflow the budget (coarse levels with very
 large clusters) fall back to the vmapped jnp path; everything else goes
-through the Pallas kernel.
+through the Pallas kernels.  ``interpret`` is auto-detected per backend
+inside the kernels (compiled on TPU, interpreter elsewhere).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from .kernel import batched_aca_t
-from .ref import batched_aca_ref
+from .kernel import batched_aca_t, batched_lowrank_matmat_t
+from .ref import batched_aca_ref, batched_lowrank_matmat_ref
 
 # Conservative VMEM budget for one program's working set (bytes).
 VMEM_BUDGET = 8 * 1024 * 1024
 
 
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def _vmem_bytes(m: int, n: int, d: int, k: int, itemsize: int = 4) -> int:
     return itemsize * (d * (m + n) + 2 * (m * k + n * k) + 4 * (m + n))
+
+
+def _lowrank_vmem_bytes(m: int, n: int, k: int, r: int, itemsize: int = 4) -> int:
+    return itemsize * (m * k + n * k + n * r + k * r + m * r)
 
 
 def batched_aca_pallas(rows: jnp.ndarray, cols: jnp.ndarray,
@@ -34,4 +34,19 @@ def batched_aca_pallas(rows: jnp.ndarray, cols: jnp.ndarray,
         return batched_aca_ref(rows, cols, kernel_name, k)
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)
-    return batched_aca_t(rows_t, cols_t, kernel_name, k, interpret=_use_interpret())
+    return batched_aca_t(rows_t, cols_t, kernel_name, k)
+
+
+def batched_lowrank_matmat(u: jnp.ndarray, v: jnp.ndarray,
+                           x: jnp.ndarray) -> jnp.ndarray:
+    """Y[b] = U[b] @ (V[b]^T @ X[b]) — the §5.4.1 apply in multi-RHS form.
+
+    u: (B, m, k), v: (B, n, k), x: (B, n, R) -> (B, m, R).  Blocks whose
+    panels would overflow the VMEM budget fall back to the jnp einsum path.
+    """
+    b, m, k = u.shape
+    n = v.shape[1]
+    r = x.shape[2]
+    if _lowrank_vmem_bytes(m, n, k, r) > VMEM_BUDGET:
+        return batched_lowrank_matmat_ref(u, v, x)
+    return batched_lowrank_matmat_t(u, v, x)

@@ -10,3 +10,10 @@ from repro.core.geometry import get_kernel
 def batched_aca_ref(rows: jnp.ndarray, cols: jnp.ndarray, kernel_name: str, k: int):
     """rows, cols: (B, m, d), (B, n, d) -> (U, V)."""
     return batched_aca(rows, cols, get_kernel(kernel_name), k)
+
+
+def batched_lowrank_matmat_ref(u: jnp.ndarray, v: jnp.ndarray,
+                               x: jnp.ndarray) -> jnp.ndarray:
+    """u: (B, m, k), v: (B, n, k), x: (B, n, R) -> U (V^T X): (B, m, R)."""
+    t = jnp.einsum("bnk,bnr->bkr", v, x)
+    return jnp.einsum("bmk,bkr->bmr", u, t)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import default_interpret
 from .._phi import pairwise_sqdist_t, phi_from_sqdist
 
 
@@ -42,11 +43,13 @@ def _kernel(rows_t_ref, cols_t_ref, x_ref, y_ref, *, kernel_name: str, point_dim
 @functools.partial(jax.jit, static_argnames=("kernel_name", "interpret"))
 def batched_kernel_matvec_t(rows_t: jnp.ndarray, cols_t: jnp.ndarray,
                             x: jnp.ndarray, kernel_name: str = "gaussian",
-                            interpret: bool = True) -> jnp.ndarray:
+                            interpret: bool | None = None) -> jnp.ndarray:
     """y[b] = phi(rows[b], cols[b]) @ x[b].
 
     rows_t, cols_t: (B, d, C) lane-major points; x: (B, C) -> (B, C).
     """
+    if interpret is None:
+        interpret = default_interpret()
     b, d, c = rows_t.shape
     grid = (b,)
     return pl.pallas_call(
@@ -59,5 +62,51 @@ def batched_kernel_matvec_t(rows_t: jnp.ndarray, cols_t: jnp.ndarray,
         ],
         out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, c), x.dtype),
+        interpret=interpret,
+    )(rows_t, cols_t, x)
+
+
+# ---------------------------------------------------------------------------
+# Multi-RHS (matmat) variant: one generated block applied to R right-hand
+# sides at once.  The MXU contraction becomes (C, C) @ (C, R) — the kernel
+# entries are generated ONCE per block and amortised over all R columns,
+# instead of R regenerations with the matvec form.  Extra VMEM is just the
+# two (C, R) panels: C=512, R=64 f32 adds ~0.26 MB — still << 16 MB.
+# ---------------------------------------------------------------------------
+
+
+def _kernel_mm(rows_t_ref, cols_t_ref, x_ref, y_ref, *, kernel_name: str,
+               point_dim: int):
+    rows_t = rows_t_ref[0]            # (d, C)
+    cols_t = cols_t_ref[0]            # (d, C)
+    x = x_ref[0]                      # (C, R)
+    d2 = pairwise_sqdist_t(rows_t, cols_t)            # (C, C)  VPU
+    a = phi_from_sqdist(d2, kernel_name, point_dim)   # (C, C)  VPU
+    y_ref[0] = jnp.dot(a, x, preferred_element_type=jnp.float32)  # MXU
+
+
+@functools.partial(jax.jit, static_argnames=("kernel_name", "interpret"))
+def batched_kernel_matmat_t(rows_t: jnp.ndarray, cols_t: jnp.ndarray,
+                            x: jnp.ndarray, kernel_name: str = "gaussian",
+                            interpret: bool | None = None) -> jnp.ndarray:
+    """Y[b] = phi(rows[b], cols[b]) @ X[b].
+
+    rows_t, cols_t: (B, d, C) lane-major points; x: (B, C, R) -> (B, C, R).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, d, c = rows_t.shape
+    r = x.shape[2]
+    grid = (b,)
+    return pl.pallas_call(
+        functools.partial(_kernel_mm, kernel_name=kernel_name, point_dim=d),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, c, r), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, r), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, r), x.dtype),
         interpret=interpret,
     )(rows_t, cols_t, x)

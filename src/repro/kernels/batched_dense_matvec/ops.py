@@ -1,25 +1,36 @@
-"""jit'd public wrapper for the batched dense kernel-matvec Pallas kernel."""
+"""jit'd public wrappers for the batched dense kernel-matvec/matmat Pallas
+kernels.
+
+Both entry points transpose the (B, C, d) point arrays to the lane-major
+(B, d, C) layout the kernels want (fused into the surrounding program by
+XLA) and dispatch; ``interpret`` is auto-detected per backend inside the
+kernels (compiled on TPU, interpreter elsewhere).
+"""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from .kernel import batched_kernel_matvec_t
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from .kernel import batched_kernel_matmat_t, batched_kernel_matvec_t
 
 
 def batched_kernel_matvec(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
                           kernel_name: str = "gaussian") -> jnp.ndarray:
     """y[b] = phi(rows[b], cols[b]) @ x[b].
 
-    rows, cols: (B, C, d) points; x: (B, C).  Transposes to the lane-major
-    (B, d, C) layout the kernel wants (fused into the surrounding program by
-    XLA) and dispatches to the Pallas kernel.
+    rows, cols: (B, C, d) points; x: (B, C) -> (B, C).
     """
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)
-    return batched_kernel_matvec_t(rows_t, cols_t, x, kernel_name,
-                                   interpret=_use_interpret())
+    return batched_kernel_matvec_t(rows_t, cols_t, x, kernel_name)
+
+
+def batched_kernel_matmat(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
+                          kernel_name: str = "gaussian") -> jnp.ndarray:
+    """Y[b] = phi(rows[b], cols[b]) @ X[b]  (multi-RHS form, paper §5.4.2).
+
+    rows, cols: (B, C, d) points; x: (B, C, R) -> (B, C, R).  The kernel
+    block is generated once per program and amortised over all R columns.
+    """
+    rows_t = jnp.swapaxes(rows, -1, -2)
+    cols_t = jnp.swapaxes(cols, -1, -2)
+    return batched_kernel_matmat_t(rows_t, cols_t, x, kernel_name)

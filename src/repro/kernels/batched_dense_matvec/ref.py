@@ -11,3 +11,10 @@ def batched_kernel_matvec_ref(rows: jnp.ndarray, cols: jnp.ndarray,
     """rows, cols: (B, C, d); x: (B, C) -> (B, C)."""
     a = get_kernel(kernel_name)(rows, cols)          # (B, C, C)
     return jnp.einsum("bij,bj->bi", a, x)
+
+
+def batched_kernel_matmat_ref(rows: jnp.ndarray, cols: jnp.ndarray,
+                              x: jnp.ndarray, kernel_name: str = "gaussian") -> jnp.ndarray:
+    """rows, cols: (B, C, d); x: (B, C, R) -> (B, C, R)."""
+    a = get_kernel(kernel_name)(rows, cols)          # (B, C, C)
+    return jnp.einsum("bij,bjr->bir", a, x)

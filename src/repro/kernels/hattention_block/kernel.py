@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import default_interpret
+
 NEG = -1e30
 
 
@@ -57,9 +59,11 @@ def _kernel(q_ref, k_ref, kp_ref, v_ref, vp_ref, first_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def hattention_nearfield(q, k, v, interpret: bool = True):
+def hattention_nearfield(q, k, v, interpret: bool | None = None):
     """q, k, v: (BH, n_leaf, c, D); q pre-scaled.  Returns (num, den, m):
     (BH, n_leaf, c, D), (BH, n_leaf, c), (BH, n_leaf, c)."""
+    if interpret is None:
+        interpret = default_interpret()
     bh, nl, c, d = q.shape
     k_prev = jnp.concatenate([jnp.zeros_like(k[:, :1]), k[:, :-1]], axis=1)
     v_prev = jnp.concatenate([jnp.zeros_like(v[:, :1]), v[:, :-1]], axis=1)

@@ -1,15 +1,9 @@
 """jit'd wrapper for the H-attention near-field Pallas kernel."""
 from __future__ import annotations
 
-import jax
-
 from .kernel import hattention_nearfield
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def hattention_nearfield_op(q, k, v):
     """q, k, v: (BH, n_leaf, c, D) with q pre-scaled -> (num, den, m)."""
-    return hattention_nearfield(q, k, v, interpret=_use_interpret())
+    return hattention_nearfield(q, k, v)

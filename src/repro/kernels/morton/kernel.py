@@ -18,6 +18,8 @@ from jax.experimental import pallas as pl
 
 from repro.core.morton import bits_per_dim
 
+from .. import default_interpret
+
 TILE = 1024
 
 
@@ -42,8 +44,10 @@ def _kernel(coords_t_ref, hi_ref, lo_ref, *, d: int, nb: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def morton_encode_t(coords_t: jnp.ndarray, interpret: bool = True):
+def morton_encode_t(coords_t: jnp.ndarray, interpret: bool | None = None):
     """coords_t: (d, N) with N a multiple of TILE -> (hi, lo) uint32 (N,)."""
+    if interpret is None:
+        interpret = default_interpret()
     d, n = coords_t.shape
     nb = bits_per_dim(d)
     grid = (n // TILE,)

@@ -1,14 +1,10 @@
 """jit'd wrapper for the Morton encode Pallas kernel (pads to the tile)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .kernel import TILE, morton_encode_t
 
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def morton_encode_pallas(coords: jnp.ndarray):
@@ -18,5 +14,5 @@ def morton_encode_pallas(coords: jnp.ndarray):
     coords_t = jnp.swapaxes(coords, 0, 1)
     if n_pad != n:
         coords_t = jnp.pad(coords_t, ((0, 0), (0, n_pad - n)))
-    hi, lo = morton_encode_t(coords_t, interpret=_use_interpret())
+    hi, lo = morton_encode_t(coords_t)
     return hi[:n], lo[:n]

@@ -18,6 +18,23 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+# --- version compat -------------------------------------------------------
+# jax >= 0.5 exposes ``jax.shard_map`` and ``lax.pvary``; 0.4.x only has
+# ``jax.experimental.shard_map.shard_map`` and no pvary (its replication
+# checker is disabled instead, which pvary exists to satisfy).
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
+_pvary = getattr(lax, "pvary", None) or (lambda x, axes: x)
+
 
 def pipeline_apply(stage_params, x_microbatches, *, axis: str, n_stages: int,
                    stage_fn):
@@ -42,9 +59,9 @@ def pipeline_apply(stage_params, x_microbatches, *, axis: str, n_stages: int,
         params = jax.tree.map(lambda p: p[0], params_local)
         total = n_micro + n_stages - 1
         # mark the carries as device-varying along the pipeline axis
-        buf = lax.pvary(jnp.zeros_like(xs_local[0]), (axis,))
-        outs = lax.pvary(jnp.zeros((n_micro,) + xs_local.shape[1:],
-                                   xs_local.dtype), (axis,))
+        buf = _pvary(jnp.zeros_like(xs_local[0]), (axis,))
+        outs = _pvary(jnp.zeros((n_micro,) + xs_local.shape[1:],
+                                xs_local.dtype), (axis,))
 
         def tick(carry, t):
             buf, outs = carry
@@ -71,7 +88,7 @@ def pipeline_apply(stage_params, x_microbatches, *, axis: str, n_stages: int,
     mesh = jax.sharding.Mesh(
         *_current_mesh_parts(axis))
     from jax.sharding import PartitionSpec as P
-    return jax.shard_map(
+    return _shard_map(
         per_stage, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

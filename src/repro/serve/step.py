@@ -1,15 +1,21 @@
-"""Serving steps: prefill (build caches + first logits) and decode (one token).
+"""Serving steps: LM prefill/decode plus batched H-matrix query serving.
 
-Shapes follow the assignment:
+LM shapes follow the assignment:
   * ``prefill_step(params, tokens)``      tokens (B, S) -> logits (B, S, V), caches
   * ``decode_step(params, tokens, caches, cache_len)``
         tokens (B, 1) + caches of capacity S -> logits (B, 1, V), new caches
+
+``HMatrixServer`` is the H-matrix analogue of the decode batcher: incoming
+per-user query vectors are packed into one (N, R) panel and served by a
+SINGLE ``make_apply`` launch (multi-RHS matmat), so heavy traffic pays the
+batched block work once per panel instead of once per user.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.hmatrix import HMatrix, make_apply
 from repro.models.api import get_model
 
 
@@ -34,6 +40,45 @@ def make_decode_step(cfg):
         return logits, new_caches
 
     return decode_step
+
+
+class HMatrixServer:
+    """Micro-batching front-end over the batched H-matrix executor.
+
+    Queries (vectors the operator is applied to) are collected into panels
+    of a FIXED width ``max_batch`` — short panels are zero-padded — so the
+    server runs exactly one compiled (N, max_batch) matmat program no
+    matter the instantaneous load (no per-load recompiles, the same
+    static-shape discipline as the LM decode path).
+    """
+
+    def __init__(self, hm: HMatrix, max_batch: int = 64,
+                 use_pallas: bool = False):
+        self.n = hm.shape[0]
+        self.max_batch = max_batch
+        self._apply = make_apply(hm, use_pallas=use_pallas)
+
+    def serve(self, queries) -> list:
+        """queries: iterable of (N,) vectors -> list of (N,) results.
+
+        Packs into ceil(len/max_batch) panels; each panel is one device
+        launch.
+        """
+        qs = [jnp.asarray(q) for q in queries]
+        for q in qs:
+            if q.shape != (self.n,):
+                raise ValueError(f"query shape {q.shape} != ({self.n},)")
+        out: list = []
+        for start in range(0, len(qs), self.max_batch):
+            chunk = qs[start:start + self.max_batch]
+            panel = jnp.stack(chunk, axis=1)               # (N, r)
+            if panel.shape[1] < self.max_batch:            # pad to static R
+                pad = jnp.zeros((self.n, self.max_batch - panel.shape[1]),
+                                panel.dtype)
+                panel = jnp.concatenate([panel, pad], axis=1)
+            z = self._apply(panel)
+            out.extend(z[:, j] for j in range(len(chunk)))
+        return out
 
 
 def greedy_sample(logits, vocab_size: int):

@@ -71,8 +71,12 @@ def apply_updates(params, grads, opt_state, step, cfg: AdamWConfig):
         if cfg.grad_clip > 0 else 1.0
     grads = jax.tree.map(lambda g: g * scale, grads)
 
-    lr = lr_schedule(cfg, step)
+    # 1-based update index: the SAME t drives the lr schedule and the Adam
+    # bias correction.  (Indexing the schedule with the 0-based step count
+    # left the very first update at lr == 0 — the whole first batch's
+    # gradient was silently discarded, even with warmup_steps == 0.)
     t = (step + 1).astype(jnp.float32)
+    lr = lr_schedule(cfg, t)
     bc1 = 1.0 - cfg.b1 ** t
     bc2 = 1.0 - cfg.b2 ** t
 

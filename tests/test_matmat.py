@@ -1,0 +1,118 @@
+"""Multi-RHS batched H-matrix application (`make_apply`) vs the dense oracle,
+plus the two new matmat kernel paths vs their ref.py oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_hmatrix, dense_matvec_oracle, halton, make_apply, make_matvec
+from repro.kernels.batched_aca.ops import batched_lowrank_matmat
+from repro.kernels.batched_aca.ref import batched_lowrank_matmat_ref
+from repro.kernels.batched_dense_matvec.ops import batched_kernel_matmat
+from repro.kernels.batched_dense_matvec.ref import batched_kernel_matmat_ref
+
+
+@pytest.mark.parametrize("r", [1, 8, 64])
+@pytest.mark.parametrize("precompute", [False, True])
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_apply_matches_oracle_columnwise(r, precompute, use_pallas, rng):
+    """(N, R) apply == dense oracle, column by column, P and NP modes,
+    jnp and Pallas-interpret routes."""
+    n = 1200
+    pts = halton(n, 2)
+    X = jnp.asarray(rng.randn(n, r).astype(np.float32))
+    hm = build_hmatrix(pts, "gaussian", k=12, c_leaf=128, precompute=precompute)
+    Z = make_apply(hm, use_pallas=use_pallas)(X)
+    assert Z.shape == (n, r)
+    Z_ref = dense_matvec_oracle(pts, "gaussian", X)
+    for j in range(r):
+        rel = float(jnp.linalg.norm(Z[:, j] - Z_ref[:, j]) /
+                    jnp.linalg.norm(Z_ref[:, j]))
+        assert rel < 1e-4, (j, rel)
+
+
+def test_apply_vector_matches_matvec(rng):
+    """(N,) input keeps the old make_matvec contract (shape and values)."""
+    n = 1000
+    pts = halton(n, 2)
+    x = jnp.asarray(rng.randn(n).astype(np.float32))
+    hm = build_hmatrix(pts, "gaussian", k=10, c_leaf=128)
+    z_apply = make_apply(hm)(x)
+    z_mv = make_matvec(hm)(x)
+    assert z_apply.shape == (n,)
+    np.testing.assert_allclose(np.asarray(z_apply), np.asarray(z_mv), atol=1e-6)
+
+
+def test_apply_panel_equals_stacked_vectors(rng):
+    """H @ [x1 .. xR] == [H x1 .. H xR] exactly (same program semantics)."""
+    n = 1024
+    pts = halton(n, 3)
+    X = jnp.asarray(rng.randn(n, 8).astype(np.float32))
+    hm = build_hmatrix(pts, "matern", k=10, c_leaf=128, precompute=True)
+    ap = make_apply(hm)
+    Z = ap(X)
+    cols = jnp.stack([ap(X[:, j]) for j in range(8)], axis=1)
+    np.testing.assert_allclose(np.asarray(Z), np.asarray(cols),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,c,d,r", [(1, 128, 2, 1), (3, 128, 3, 8),
+                                     (2, 256, 2, 64)])
+@pytest.mark.parametrize("kernel", ["gaussian", "matern"])
+def test_dense_matmat_kernel_sweep(b, c, d, r, kernel, rng):
+    rows = jnp.asarray(rng.rand(b, c, d).astype(np.float32))
+    cols = jnp.asarray(rng.rand(b, c, d).astype(np.float32))
+    x = jnp.asarray(rng.randn(b, c, r).astype(np.float32))
+    y = batched_kernel_matmat(rows, cols, x, kernel)
+    y_ref = batched_kernel_matmat_ref(rows, cols, x, kernel)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,m,n,k,r", [(2, 64, 64, 8, 1), (3, 128, 64, 16, 8),
+                                       (1, 128, 128, 16, 64)])
+def test_lowrank_matmat_kernel_sweep(b, m, n, k, r, rng):
+    u = jnp.asarray(rng.randn(b, m, k).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, n, k).astype(np.float32))
+    x = jnp.asarray(rng.randn(b, n, r).astype(np.float32))
+    y = batched_lowrank_matmat(u, v, x)
+    y_ref = batched_lowrank_matmat_ref(u, v, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_lowrank_matmat_vmem_fallback(rng):
+    """Panels over the VMEM budget must route to the jnp path, correctly."""
+    from repro.kernels.batched_aca import ops
+    old = ops.VMEM_BUDGET
+    try:
+        ops.VMEM_BUDGET = 1024     # force fallback
+        u = jnp.asarray(rng.randn(2, 64, 8).astype(np.float32))
+        v = jnp.asarray(rng.randn(2, 64, 8).astype(np.float32))
+        x = jnp.asarray(rng.randn(2, 64, 4).astype(np.float32))
+        y = ops.batched_lowrank_matmat(u, v, x)
+        y_ref = batched_lowrank_matmat_ref(u, v, x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+    finally:
+        ops.VMEM_BUDGET = old
+
+
+def test_hmatrix_server_panels(rng):
+    """Server results match per-query matvecs, across panel boundaries
+    (load > max_batch) and with padding (load % max_batch != 0)."""
+    from repro.serve.step import HMatrixServer
+    n = 1024
+    pts = halton(n, 2)
+    hm = build_hmatrix(pts, "gaussian", k=10, c_leaf=128, precompute=True)
+    srv = HMatrixServer(hm, max_batch=4)
+    queries = [jnp.asarray(rng.randn(n).astype(np.float32)) for _ in range(6)]
+    outs = srv.serve(queries)
+    mv = make_matvec(hm)
+    assert len(outs) == 6
+    for q, z in zip(queries, outs):
+        # panel and single-vector programs contract in different orders ->
+        # f32 rounding differs in the last couple of bits
+        np.testing.assert_allclose(np.asarray(z), np.asarray(mv(q)),
+                                   rtol=1e-4, atol=1e-4)
+    with pytest.raises(ValueError):
+        srv.serve([jnp.zeros((n + 1,), jnp.float32)])

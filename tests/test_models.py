@@ -15,6 +15,8 @@ from repro.models.api import count_params_analytic, get_model
 from repro.train.optimizer import AdamWConfig
 from repro.train.step import make_train_step
 
+pytestmark = pytest.mark.slow
+
 ALL_SMOKE = list(ASSIGNED) + ["qwen2.5-14b-hmatrix"]
 
 
