@@ -14,7 +14,7 @@ import sys
 import traceback
 
 from . import (bench_batching, bench_compare, bench_complexity,
-               bench_convergence, bench_matmat, bench_roofline)
+               bench_convergence, bench_matmat, bench_roofline, bench_solve)
 
 
 def main() -> None:
@@ -29,6 +29,8 @@ def main() -> None:
             ns=(2048, 4096, 8192) if args.quick else (2048, 4096, 8192, 16384, 32768))),
         ("fig14-15", lambda: bench_batching.run(n=8192 if args.quick else 16384)),
         ("matmat", lambda: bench_matmat.run(n=4096 if args.quick else 8192)),
+        ("solve", lambda: bench_solve.run(n=4096, domain=16.0) if args.quick
+         else bench_solve.run()),
         ("fig16-17", lambda: bench_compare.run(n=4096 if args.quick else 8192)),
         ("roofline", lambda: bench_roofline.run()),
     ]

@@ -11,22 +11,26 @@ Public API:
                                                   application, §2.5/§5.4)
     h_attention                                  (the technique inside the LM stack)
 """
-from .geometry import halton, get_kernel, dense_kernel_matrix, gaussian_kernel, matern_kernel
+from .geometry import (halton, get_kernel, dense_kernel_matrix, gaussian_kernel,
+                       matern_kernel, sinusoid_targets)
 from .morton import morton_encode, morton_order, morton_sort
 from .clustering import ClusterTree, build_cluster_tree, permute_to_tree, permute_from_tree
 from .admissibility import admissible, diam, dist
 from .block_tree import HMatrixPlan, build_block_tree
 from .aca import aca_fixed_rank, batched_aca, aca_adaptive
 from .hmatrix import (HMatrix, build_hmatrix, make_apply, make_matvec,
-                      dense_matvec_oracle, compute_factors)
+                      dense_matvec_oracle, compute_factors, diagonal_blocks,
+                      apply_in_tree_order)
 
 __all__ = [
-    "halton", "get_kernel", "dense_kernel_matrix", "gaussian_kernel", "matern_kernel",
+    "halton", "get_kernel", "dense_kernel_matrix", "gaussian_kernel",
+    "matern_kernel", "sinusoid_targets",
     "morton_encode", "morton_order", "morton_sort",
     "ClusterTree", "build_cluster_tree", "permute_to_tree", "permute_from_tree",
     "admissible", "diam", "dist",
     "HMatrixPlan", "build_block_tree",
     "aca_fixed_rank", "batched_aca", "aca_adaptive",
     "HMatrix", "build_hmatrix", "make_apply", "make_matvec",
-    "dense_matvec_oracle", "compute_factors",
+    "dense_matvec_oracle", "compute_factors", "diagonal_blocks",
+    "apply_in_tree_order",
 ]

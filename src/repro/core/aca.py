@@ -110,9 +110,7 @@ def aca_adaptive(a: jnp.ndarray, eps: float, k_max: int, eta: float = 0.0):
             rank = r
             break
         u_r = u_hat / alpha
-        v_r = a[i_r, :] - V[:, :n].T[:r].T[:, :r] @ U[i_r, :r] if r else a[i_r, :].copy()
-        if r:
-            v_r = a[i_r, :] - V[:, :r] @ U[i_r, :r]
+        v_r = a[i_r, :] - V[:, :r] @ U[i_r, :r]
         U[:, r] = u_r
         V[:, r] = v_r
         row_mask[i_r] = False

@@ -100,7 +100,13 @@ def build_cluster_tree(coords: jnp.ndarray, c_leaf: int = 256) -> ClusterTree:
     n, d = coords.shape
     if c_leaf & (c_leaf - 1):
         raise ValueError("c_leaf must be a power of two")
-    sorted_pts, perm = morton_sort(coords)
+    # Morton quantisation assumes [0,1]^d (out-of-range coords clip to the
+    # same code, degenerating the sort): encode on the normalised unit box,
+    # keep the true coordinates for all geometry.
+    lo, hi = coords.min(axis=0), coords.max(axis=0)
+    unit = (coords - lo) / jnp.maximum(hi - lo, 1e-30)
+    _, perm = morton_sort(unit)
+    sorted_pts = coords[perm]
     n_pad = max(next_pow2(n), c_leaf)
     if n_pad > n:
         pad = jnp.broadcast_to(sorted_pts[-1], (n_pad - n, d))

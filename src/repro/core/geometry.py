@@ -132,3 +132,23 @@ def dense_kernel_matrix(points: jnp.ndarray, kernel: Callable | str = "gaussian"
         kernel = get_kernel(kernel)
     pb = points if points_b is None else points_b
     return kernel(points, pb)
+
+
+_TARGET_FREQS = ((4.0, 3.0), (2.0, 5.0), (6.0, 1.0), (3.0, 3.0),
+                 (5.0, 2.0), (1.0, 6.0), (4.0, 4.0), (2.0, 2.0))
+
+
+def sinusoid_targets(pts: jnp.ndarray, r: int, domain: float = 1.0) -> jnp.ndarray:
+    """Family of R regression targets f_j(y) = sin(a_j y_0) cos(b_j y_1).
+
+    The model regression problem of the kernel-ridge demo/benchmarks:
+    2-D points on a domain of side ``domain`` -> (N, R) f32 target panel
+    (frequencies cycle through a fixed 8-entry table).
+    """
+    import numpy as np
+    y = np.asarray(pts)
+    freqs = (_TARGET_FREQS * ((r + len(_TARGET_FREQS) - 1)
+                              // len(_TARGET_FREQS)))[:r]
+    cols = [np.sin(a * y[:, 0] / domain) * np.cos(b * y[:, 1] / domain)
+            for a, b in freqs]
+    return jnp.asarray(np.stack(cols, axis=1).astype(np.float32))

@@ -90,6 +90,24 @@ def build_hmatrix(coords: jnp.ndarray, kernel: str | Callable = "gaussian",
                    k=k, factors=factors)
 
 
+def diagonal_blocks(hm: HMatrix) -> jnp.ndarray:
+    """Dense diagonal leaf blocks ``A[i*c:(i+1)*c, i*c:(i+1)*c]`` in TREE order.
+
+    Returns a ``(n_leaf, c, c)`` batch of kernel blocks — the (always
+    inadmissible) diagonal of the leaf partition, gathered with the same
+    reshape machinery as the dense-leaf apply.  This is the raw material of
+    the block-Jacobi preconditioner in ``repro.solve`` (add ``sigma2 * I``
+    and factorize).  Blocks covering the padded tail contain duplicated
+    points (rank-deficient), so shift by a positive ``sigma2`` before any
+    factorization.
+    """
+    plan = hm.plan
+    c = plan.c_leaf
+    n_leaf = plan.n_pad // c
+    pts = hm.tree.points.reshape(n_leaf, c, -1)
+    return hm.kernel(pts, pts)
+
+
 # ---------------------------------------------------------------------------
 # Fast application (single jitted program for x: (N,) and X: (N, R))
 # ---------------------------------------------------------------------------
@@ -140,6 +158,35 @@ def tree_kernel_name(kernel: Callable) -> str:
     return {"gaussian_kernel": "gaussian", "matern_kernel": "matern"}.get(name, name)
 
 
+def apply_in_tree_order(tree: ClusterTree, plan: HMatrixPlan, kernel: Callable,
+                        k: int, use_pallas: bool, points: jnp.ndarray,
+                        factors: dict | None, x_pad: jnp.ndarray) -> jnp.ndarray:
+    """Core H-matrix application on a TREE-ordered padded panel.
+
+    ``x_pad: (n_pad, R) -> z_pad: (n_pad, R)`` — no permutations, no jit:
+    this is the traceable body shared by :func:`make_apply` (which wraps it
+    with the original-order permutations) and ``repro.solve.make_solver``
+    (which inlines it into the CG ``lax.while_loop`` so the whole Krylov
+    solve compiles to one device program).
+    """
+    z_pad = jnp.zeros_like(x_pad)
+    for level, blocks in plan.aca_levels.items():
+        if factors is not None:
+            U, V = factors[level]
+        else:
+            m = tree.n_pad >> level
+            rp = points.reshape(1 << level, m, -1)[jnp.asarray(blocks[:, 0])]
+            cp = points.reshape(1 << level, m, -1)[jnp.asarray(blocks[:, 1])]
+            if use_pallas:
+                from repro.kernels.batched_aca.ops import batched_aca_pallas
+                U, V = batched_aca_pallas(rp, cp, tree_kernel_name(kernel), k)
+            else:
+                U, V = batched_aca(rp, cp, kernel, k)
+        z_pad = _aca_level_apply(tree, level, blocks, U, V, x_pad, z_pad,
+                                 use_pallas)
+    return _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas)
+
+
 def make_apply(hm: HMatrix, use_pallas: bool = False) -> Callable:
     """Return jitted ``apply(X) -> Z`` (X, Z in the ORIGINAL point order).
 
@@ -160,25 +207,10 @@ def make_apply(hm: HMatrix, use_pallas: bool = False) -> Callable:
 
     @jax.jit
     def _apply(points, factors, x):
-        tr = tree  # static metadata (shapes/levels); `points` is the data
-        x_pad = permute_to_tree(tr, x)                         # (n_pad, R)
-        z_pad = jnp.zeros_like(x_pad)
-        for level, blocks in plan.aca_levels.items():
-            if factors is not None:
-                U, V = factors[level]
-            else:
-                m = tr.n_pad >> level
-                rp = points.reshape(1 << level, m, -1)[jnp.asarray(blocks[:, 0])]
-                cp = points.reshape(1 << level, m, -1)[jnp.asarray(blocks[:, 1])]
-                if use_pallas:
-                    from repro.kernels.batched_aca.ops import batched_aca_pallas
-                    U, V = batched_aca_pallas(rp, cp, tree_kernel_name(kernel), k)
-                else:
-                    U, V = batched_aca(rp, cp, kernel, k)
-            z_pad = _aca_level_apply(tr, level, blocks, U, V, x_pad, z_pad,
-                                     use_pallas)
-        z_pad = _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas)
-        return permute_from_tree(tr, z_pad)
+        x_pad = permute_to_tree(tree, x)                       # (n_pad, R)
+        z_pad = apply_in_tree_order(tree, plan, kernel, k, use_pallas,
+                                    points, factors, x_pad)
+        return permute_from_tree(tree, z_pad)
 
     def apply(x: jnp.ndarray) -> jnp.ndarray:
         if x.ndim not in (1, 2) or x.shape[0] != tree.n:

@@ -1,0 +1,44 @@
+"""jit'd public wrappers for the batched block Cholesky Pallas kernels.
+
+Same dispatch discipline as the other kernel packages: blocks whose VMEM
+working set would overflow the budget fall back to the jnp oracle path;
+``interpret`` is auto-detected per backend inside the kernels (compiled on
+TPU, interpreter elsewhere).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import batched_block_cholesky_solve_t, batched_block_cholesky_t
+from .ref import batched_block_cholesky_ref, batched_block_cholesky_solve_ref
+
+# Conservative VMEM budget for one program's working set (bytes).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _chol_vmem_bytes(c: int, itemsize: int = 4) -> int:
+    return itemsize * 2 * c * c
+
+
+def _solve_vmem_bytes(c: int, r: int, itemsize: int = 4) -> int:
+    return itemsize * (2 * c * c + 3 * c * r)
+
+
+def batched_block_cholesky(a: jnp.ndarray) -> jnp.ndarray:
+    """L[b] = cholesky(A[b]).  a: (B, c, c) SPD -> (B, c, c) lower."""
+    c = a.shape[1]
+    if _chol_vmem_bytes(c) > VMEM_BUDGET:
+        return batched_block_cholesky_ref(a)
+    return batched_block_cholesky_t(a)
+
+
+def batched_block_cholesky_solve(l: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Y[b] = (L[b] L[b]^T)^{-1} X[b] — the per-iteration block-Jacobi apply.
+
+    l: (B, c, c) lower factors, x: (B, c, R) -> (B, c, R).
+    """
+    c = l.shape[1]
+    r = x.shape[2]
+    if _solve_vmem_bytes(c, r) > VMEM_BUDGET:
+        return batched_block_cholesky_solve_ref(l, x)
+    return batched_block_cholesky_solve_t(l, x)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the batched block Cholesky factorize/solve kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def batched_block_cholesky_ref(a: jnp.ndarray) -> jnp.ndarray:
+    """a: (B, c, c) SPD -> lower Cholesky factors (B, c, c)."""
+    return jnp.linalg.cholesky(a)
+
+
+def batched_block_cholesky_solve_ref(l: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """(L L^T)^{-1} X per block.  l: (B, c, c) lower, x: (B, c, R)."""
+    y = lax.linalg.triangular_solve(l, x, left_side=True, lower=True)
+    return lax.linalg.triangular_solve(l, y, left_side=True, lower=True,
+                                       transpose_a=True)

@@ -9,14 +9,18 @@ LM shapes follow the assignment:
 per-user query vectors are packed into one (N, R) panel and served by a
 SINGLE ``make_apply`` launch (multi-RHS matmat), so heavy traffic pays the
 batched block work once per panel instead of once per user.
+``HMatrixSolveServer`` does the same for regression-FIT traffic: a panel of
+target vectors is solved by one fused ``make_solver`` while_loop launch.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.hmatrix import HMatrix, make_apply
 from repro.models.api import get_model
+from repro.solve import make_solver
 
 
 def make_prefill_step(cfg):
@@ -62,23 +66,67 @@ class HMatrixServer:
         """queries: iterable of (N,) vectors -> list of (N,) results.
 
         Packs into ceil(len/max_batch) panels; each panel is one device
-        launch.
+        launch.  Packing and zero-padding happen ONCE on host in a single
+        (N, max_batch) buffer (one host->device transfer per panel, instead
+        of a per-query transfer + on-device stack/concat), and results come
+        back in one host fetch per panel (instead of R per-column device
+        slices).
         """
-        qs = [jnp.asarray(q) for q in queries]
-        for q in qs:
-            if q.shape != (self.n,):
-                raise ValueError(f"query shape {q.shape} != ({self.n},)")
-        out: list = []
-        for start in range(0, len(qs), self.max_batch):
-            chunk = qs[start:start + self.max_batch]
-            panel = jnp.stack(chunk, axis=1)               # (N, r)
-            if panel.shape[1] < self.max_batch:            # pad to static R
-                pad = jnp.zeros((self.n, self.max_batch - panel.shape[1]),
-                                panel.dtype)
-                panel = jnp.concatenate([panel, pad], axis=1)
-            z = self._apply(panel)
-            out.extend(z[:, j] for j in range(len(chunk)))
-        return out
+        return _serve_in_panels(queries, self.n, self.max_batch,
+                                lambda panel: self._apply(panel))
+
+
+def _serve_in_panels(vectors, n: int, max_batch: int, launch) -> list:
+    """Shared micro-batching front-end: host-pack -> launch -> host-unpack."""
+    qs = [np.asarray(q, dtype=np.float32) for q in vectors]
+    for q in qs:
+        if q.shape != (n,):
+            raise ValueError(f"query shape {q.shape} != ({n},)")
+    out: list = []
+    for start in range(0, len(qs), max_batch):
+        chunk = qs[start:start + max_batch]
+        panel = np.zeros((n, max_batch), np.float32)    # pad in the buffer
+        panel[:, :len(chunk)] = np.stack(chunk, axis=1)
+        z = np.asarray(launch(jnp.asarray(panel)))      # one fetch
+        out.extend(z[:, j] for j in range(len(chunk)))
+    return out
+
+
+class HMatrixSolveServer:
+    """Micro-batching front-end over the FUSED H-matrix solver.
+
+    The regression-fit analogue of :class:`HMatrixServer`: incoming
+    per-user target vectors ``f`` (the right-hand sides of
+    ``(A + sigma^2 I) c = f``, paper §1 eq. 1) are packed into fixed-width
+    panels and each panel is solved by a SINGLE ``make_solver`` launch —
+    one compiled ``while_loop`` program per panel, every CG iteration one
+    batched matmat over all ``max_batch`` columns.  Per-request
+    convergence records land in ``last_info`` (one
+    :class:`repro.solve.SolveInfo` per launched panel).
+    """
+
+    def __init__(self, hm: HMatrix, sigma2: float, max_batch: int = 8,
+                 tol: float = 1e-5, max_iter: int = 300,
+                 precondition: bool = True, use_pallas: bool = False):
+        self.n = hm.shape[0]
+        self.max_batch = max_batch
+        self.last_info: list = []
+        self._solve = make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
+                                  precondition=precondition,
+                                  use_pallas=use_pallas)
+
+    def serve(self, targets) -> list:
+        """targets: iterable of (N,) rhs vectors -> list of (N,) coefficient
+        vectors.  Zero-padded columns converge instantly (their active mask
+        starts False), so short panels cost no extra iterations."""
+        self.last_info = []
+
+        def launch(panel):
+            c, info = self._solve(panel)
+            self.last_info.append(info)
+            return c
+
+        return _serve_in_panels(targets, self.n, self.max_batch, launch)
 
 
 def greedy_sample(logits, vocab_size: int):

@@ -1,0 +1,11 @@
+"""repro.solve — fused on-device H-matrix Krylov solves (paper §1, eq. 1).
+
+Public API:
+    make_solver      batched multi-RHS preconditioned CG as ONE jitted
+                     ``lax.while_loop`` over the inlined H-matrix apply
+    host_loop_cg     the pre-fusion host-Python CG loop (benchmark baseline)
+    SolveInfo        per-solve convergence record
+"""
+from .cg import SolveInfo, host_loop_cg, make_solver
+
+__all__ = ["make_solver", "host_loop_cg", "SolveInfo"]
