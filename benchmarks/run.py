@@ -14,7 +14,8 @@ import sys
 import traceback
 
 from . import (bench_batching, bench_compare, bench_complexity,
-               bench_convergence, bench_matmat, bench_roofline, bench_solve)
+               bench_convergence, bench_matmat, bench_roofline, bench_shard,
+               bench_solve)
 
 
 def main() -> None:
@@ -31,6 +32,8 @@ def main() -> None:
         ("matmat", lambda: bench_matmat.run(n=4096 if args.quick else 8192)),
         ("solve", lambda: bench_solve.run(n=4096, domain=16.0) if args.quick
          else bench_solve.run()),
+        ("shard", lambda: bench_shard.run(n=2048 if args.quick else 8192,
+                                          r=16 if args.quick else 64)),
         ("fig16-17", lambda: bench_compare.run(n=4096 if args.quick else 8192)),
         ("roofline", lambda: bench_roofline.run()),
     ]

@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Docs checker (stdlib only — runs in CI without jax installed).
+
+Verifies that the documentation surface stays truthful:
+
+  * every relative markdown link in README.md / docs/ARCHITECTURE.md
+    resolves to a file or directory in the repo;
+  * every ``python -m <module>`` command quoted in fenced code blocks maps
+    to an actual module file (checked on disk, never imported);
+  * every ``python <path>.py`` / ``bash <path>.sh`` command points at an
+    existing file;
+  * inline-code path references like `src/repro/parallel/hshard.py` exist.
+
+    python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCS = [ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md"]
+# module roots for `python -m` resolution (PYTHONPATH=src convention + repo root)
+MODULE_ROOTS = [ROOT, ROOT / "src"]
+# path references may be repo-relative or package-relative (docs talk in layers)
+PATH_ROOTS = [ROOT, ROOT / "src", ROOT / "src" / "repro"]
+# third-party `python -m` targets that are deps, not repo modules
+EXTERNAL_MODULES = {"pytest"}
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"```[a-z]*\n(.*?)```", re.S)
+PY_M_RE = re.compile(r"python3?\s+-m\s+([A-Za-z_][\w.]*)")
+FILE_CMD_RE = re.compile(r"(?:python3?|bash)\s+((?:[\w.-]+/)+[\w.-]+\.(?:py|sh))")
+INLINE_PATH_RE = re.compile(r"`((?:[\w.-]+/)+[\w.-]+\.(?:py|md|sh|yml|json))`")
+
+
+def module_exists(mod: str) -> bool:
+    rel = Path(*mod.split("."))
+    return any((root / rel).with_suffix(".py").is_file() or
+               (root / rel / "__init__.py").is_file() or
+               (root / rel).is_dir()
+               for root in MODULE_ROOTS)
+
+
+def check_doc(doc: Path) -> list[str]:
+    errors = []
+    text = doc.read_text()
+
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = (doc.parent / target.split("#")[0]).resolve()
+        if not path.exists():
+            errors.append(f"{doc.name}: broken link -> {target}")
+
+    fenced = "\n".join(FENCE_RE.findall(text))
+    for mod in PY_M_RE.findall(fenced):
+        if mod not in EXTERNAL_MODULES and not module_exists(mod):
+            errors.append(f"{doc.name}: `python -m {mod}` does not resolve")
+    for fp in FILE_CMD_RE.findall(fenced):
+        if not (ROOT / fp).is_file():
+            errors.append(f"{doc.name}: command references missing file {fp}")
+
+    for fp in INLINE_PATH_RE.findall(text):
+        # results/ JSONs are build artifacts: require the directory only
+        tail = Path(fp).parent if fp.startswith("results/") else Path(fp)
+        if not any((root / tail).exists() for root in PATH_ROOTS):
+            errors.append(f"{doc.name}: referenced path missing -> {fp}")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for doc in DOCS:
+        if not doc.is_file():
+            errors.append(f"missing doc: {doc.relative_to(ROOT)}")
+            continue
+        errors.extend(check_doc(doc))
+    for err in errors:
+        print(f"FAIL {err}", file=sys.stderr)
+    if not errors:
+        print(f"docs OK: {', '.join(str(d.relative_to(ROOT)) for d in DOCS)}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -163,11 +163,32 @@ def apply_in_tree_order(tree: ClusterTree, plan: HMatrixPlan, kernel: Callable,
                         factors: dict | None, x_pad: jnp.ndarray) -> jnp.ndarray:
     """Core H-matrix application on a TREE-ordered padded panel.
 
-    ``x_pad: (n_pad, R) -> z_pad: (n_pad, R)`` — no permutations, no jit:
-    this is the traceable body shared by :func:`make_apply` (which wraps it
-    with the original-order permutations) and ``repro.solve.make_solver``
-    (which inlines it into the CG ``lax.while_loop`` so the whole Krylov
-    solve compiles to one device program).
+    No permutations, no jit: this is the traceable body shared by
+    :func:`make_apply` (which wraps it with the original-order
+    permutations), ``repro.solve.make_solver`` (which inlines it into the
+    CG ``lax.while_loop`` so the whole Krylov solve compiles to one device
+    program), and ``repro.parallel.hshard`` (which runs it per device
+    inside a ``shard_map``).
+
+    Parameters
+    ----------
+    tree, plan, kernel, k : ClusterTree, HMatrixPlan, Callable, int
+        The H-matrix structure (static under jit).
+    use_pallas : bool
+        Route the hot loops through the Pallas kernels.
+    points : jnp.ndarray, shape (n_pad, d)
+        Tree-ordered coordinates as a runtime argument (see
+        :func:`make_apply` on why this must not be a traced constant).
+    factors : dict | None
+        ``level -> (U (B, m, k), V (B, m, k))`` stored ACA factors (P mode)
+        or None (NP mode: regenerate per product).
+    x_pad : jnp.ndarray, shape (n_pad, R)
+        Tree-ordered operand panel (padded tail rows zero).
+
+    Returns
+    -------
+    z_pad : jnp.ndarray, shape (n_pad, R)
+        ``H @ x_pad`` in tree ordering.
     """
     z_pad = jnp.zeros_like(x_pad)
     for level, blocks in plan.aca_levels.items():
@@ -187,15 +208,39 @@ def apply_in_tree_order(tree: ClusterTree, plan: HMatrixPlan, kernel: Callable,
     return _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas)
 
 
-def make_apply(hm: HMatrix, use_pallas: bool = False) -> Callable:
-    """Return jitted ``apply(X) -> Z`` (X, Z in the ORIGINAL point order).
+def make_apply(hm: HMatrix, use_pallas: bool = False, mesh=None,
+               shard: str = "columns") -> Callable:
+    """Build the jitted batched executor ``apply(X) -> Z = H X``.
 
-    ``X`` may be a single vector ``(N,)`` or a panel of R right-hand sides
-    ``(N, R)``; the result has the same shape.  One compiled program per
-    distinct R — all per-block work is batched over the R columns, so the
-    ACA regeneration (NP mode) / factor streaming (P mode) cost is paid
-    once for the whole panel instead of once per column.
+    Parameters
+    ----------
+    hm : HMatrix
+        Assembled H-matrix (:func:`build_hmatrix`).
+    use_pallas : bool, optional
+        Route the hot loops (batched low-rank and dense-leaf products)
+        through the Pallas TPU kernels instead of the jnp paths.
+    mesh : jax.sharding.Mesh, optional
+        When given, return the MULTI-DEVICE executor instead: the work is
+        distributed over the mesh via ``shard_map`` (see
+        ``repro.parallel.hshard.make_sharded_apply``).
+    shard : {"columns", "rows"}, optional
+        Sharding strategy when ``mesh`` is given.  ``"columns"`` splits the
+        RHS panel along R (throughput; zero cross-device comms);
+        ``"rows"`` splits the block batches by block index with a ``psum``
+        of partials (latency, R=1-friendly).  Ignored without ``mesh``.
 
+    Returns
+    -------
+    apply : Callable
+        ``apply(x)`` with ``x`` a single vector ``(N,)`` or a panel of R
+        right-hand sides ``(N, R)``, in the ORIGINAL point order; the
+        result has the same shape.  One compiled program per distinct R —
+        all per-block work is batched over the R columns, so the ACA
+        regeneration (NP mode) / factor streaming (P mode) cost is paid
+        once for the whole panel instead of once per column.
+
+    Notes
+    -----
     NP mode (``hm.factors is None``) recomputes the ACA factors inside every
     product; P mode applies the stored factors (paper §5.4 & Fig 13).
 
@@ -203,6 +248,10 @@ def make_apply(hm: HMatrix, use_pallas: bool = False) -> Callable:
     constants): with closure capture XLA constant-folds the entire on-the-fly
     kernel evaluation at compile time, silently turning NP mode into P mode.
     """
+    if mesh is not None:
+        from repro.parallel.hshard import make_sharded_apply
+        return make_sharded_apply(hm, mesh, shard=shard, use_pallas=use_pallas)
+
     tree, plan, kernel, k = hm.tree, hm.plan, hm.kernel, hm.k
 
     @jax.jit

@@ -27,7 +27,28 @@ def _lowrank_vmem_bytes(m: int, n: int, k: int, r: int, itemsize: int = 4) -> in
 
 def batched_aca_pallas(rows: jnp.ndarray, cols: jnp.ndarray,
                        kernel_name: str, k: int):
-    """rows, cols: (B, m, d), (B, n, d) -> (U (B,m,k), V (B,n,k))."""
+    """Batched fixed-rank ACA factorization of admissible blocks (§5.4.1).
+
+    Parameters
+    ----------
+    rows : jnp.ndarray, shape (B, m, d)
+        Row cluster points per admissible block of one level group.
+    cols : jnp.ndarray, shape (B, n, d)
+        Column cluster points per block.
+    kernel_name : str
+        Registered kernel function ("gaussian", "matern").
+    k : int
+        Fixed ACA rank.
+
+    Returns
+    -------
+    U : jnp.ndarray, shape (B, m, k)
+    V : jnp.ndarray, shape (B, n, k)
+        Low-rank factors with ``phi(rows[b], cols[b]) ~= U[b] @ V[b].T``.
+        Blocks whose working set exceeds ``VMEM_BUDGET`` (coarse levels
+        with very large clusters — the paper's ``bs_ACA`` batching-size
+        heuristic) fall back to the vmapped jnp oracle.
+    """
     b, m, d = rows.shape
     n = cols.shape[1]
     if _vmem_bytes(m, n, d, k) > VMEM_BUDGET:
@@ -39,10 +60,22 @@ def batched_aca_pallas(rows: jnp.ndarray, cols: jnp.ndarray,
 
 def batched_lowrank_matmat(u: jnp.ndarray, v: jnp.ndarray,
                            x: jnp.ndarray) -> jnp.ndarray:
-    """Y[b] = U[b] @ (V[b]^T @ X[b]) — the §5.4.1 apply in multi-RHS form.
+    """Low-rank apply ``Y[b] = U[b] @ (V[b]^T @ X[b])`` in multi-RHS form.
 
-    u: (B, m, k), v: (B, n, k), x: (B, n, R) -> (B, m, R).  Blocks whose
-    panels would overflow the VMEM budget fall back to the jnp einsum path.
+    Parameters
+    ----------
+    u : jnp.ndarray, shape (B, m, k)
+    v : jnp.ndarray, shape (B, n, k)
+        ACA factors of one admissible level group.
+    x : jnp.ndarray, shape (B, n, R)
+        Panel slices gathered per block.
+
+    Returns
+    -------
+    y : jnp.ndarray, shape (B, m, R)
+        Two (k-thin) MXU contractions per block, amortised over all R
+        columns.  Blocks whose panels would overflow ``VMEM_BUDGET`` fall
+        back to the jnp einsum path.
     """
     b, m, k = u.shape
     n = v.shape[1]

@@ -25,7 +25,20 @@ def _solve_vmem_bytes(c: int, r: int, itemsize: int = 4) -> int:
 
 
 def batched_block_cholesky(a: jnp.ndarray) -> jnp.ndarray:
-    """L[b] = cholesky(A[b]).  a: (B, c, c) SPD -> (B, c, c) lower."""
+    """Batched in-VMEM Cholesky ``L[b] = cholesky(A[b])``.
+
+    Parameters
+    ----------
+    a : jnp.ndarray, shape (B, c, c)
+        SPD blocks (the shifted inadmissible diagonal leaf blocks
+        ``A_ii + sigma^2 I`` of the block-Jacobi preconditioner).
+
+    Returns
+    -------
+    l : jnp.ndarray, shape (B, c, c)
+        Lower Cholesky factors (right-looking factorization, one block per
+        program).  Oversized blocks fall back to the jnp oracle.
+    """
     c = a.shape[1]
     if _chol_vmem_bytes(c) > VMEM_BUDGET:
         return batched_block_cholesky_ref(a)
@@ -33,9 +46,19 @@ def batched_block_cholesky(a: jnp.ndarray) -> jnp.ndarray:
 
 
 def batched_block_cholesky_solve(l: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
-    """Y[b] = (L[b] L[b]^T)^{-1} X[b] — the per-iteration block-Jacobi apply.
+    """Per-iteration block-Jacobi apply ``Y[b] = (L[b] L[b]^T)^{-1} X[b]``.
 
-    l: (B, c, c) lower factors, x: (B, c, R) -> (B, c, R).
+    Parameters
+    ----------
+    l : jnp.ndarray, shape (B, c, c)
+        Lower factors from :func:`batched_block_cholesky`.
+    x : jnp.ndarray, shape (B, c, R)
+        Residual panel reshaped to leaf blocks (contiguous in tree order).
+
+    Returns
+    -------
+    y : jnp.ndarray, shape (B, c, R)
+        Forward + back substitution per block, all R columns at once.
     """
     c = l.shape[1]
     r = x.shape[2]

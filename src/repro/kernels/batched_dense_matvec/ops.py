@@ -15,9 +15,22 @@ from .kernel import batched_kernel_matmat_t, batched_kernel_matvec_t
 
 def batched_kernel_matvec(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
                           kernel_name: str = "gaussian") -> jnp.ndarray:
-    """y[b] = phi(rows[b], cols[b]) @ x[b].
+    """On-the-fly dense kernel-block matvec ``y[b] = phi(rows[b], cols[b]) @ x[b]``.
 
-    rows, cols: (B, C, d) points; x: (B, C) -> (B, C).
+    Parameters
+    ----------
+    rows, cols : jnp.ndarray, shape (B, C, d)
+        Row / column cluster points per inadmissible leaf block.
+    x : jnp.ndarray, shape (B, C)
+        Operand slices gathered per block.
+    kernel_name : str, optional
+        Registered kernel function ("gaussian", "matern").
+
+    Returns
+    -------
+    y : jnp.ndarray, shape (B, C)
+        Per-block products; the kernel block is generated in VMEM and never
+        materialised in HBM (paper §5.4.2).
     """
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)
@@ -26,10 +39,22 @@ def batched_kernel_matvec(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
 
 def batched_kernel_matmat(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
                           kernel_name: str = "gaussian") -> jnp.ndarray:
-    """Y[b] = phi(rows[b], cols[b]) @ X[b]  (multi-RHS form, paper §5.4.2).
+    """Multi-RHS form ``Y[b] = phi(rows[b], cols[b]) @ X[b]`` (paper §5.4.2).
 
-    rows, cols: (B, C, d) points; x: (B, C, R) -> (B, C, R).  The kernel
-    block is generated once per program and amortised over all R columns.
+    Parameters
+    ----------
+    rows, cols : jnp.ndarray, shape (B, C, d)
+        Row / column cluster points per inadmissible leaf block.
+    x : jnp.ndarray, shape (B, C, R)
+        Panel slices gathered per block.
+    kernel_name : str, optional
+        Registered kernel function ("gaussian", "matern").
+
+    Returns
+    -------
+    y : jnp.ndarray, shape (B, C, R)
+        Per-block (C, C) @ (C, R) MXU contractions; the kernel block is
+        generated once per program and amortised over all R columns.
     """
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)

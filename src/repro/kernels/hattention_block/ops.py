@@ -5,5 +5,23 @@ from .kernel import hattention_nearfield
 
 
 def hattention_nearfield_op(q, k, v):
-    """q, k, v: (BH, n_leaf, c, D) with q pre-scaled -> (num, den, m)."""
+    """Blocked near-field leaf attention (each leaf block attends itself
+    and its predecessor — the inadmissible band of the attention matrix).
+
+    Parameters
+    ----------
+    q, k, v : jnp.ndarray, shape (BH, n_leaf, c, D)
+        Per-(batch*head) leaf-blocked queries (pre-scaled by
+        ``1/sqrt(D)``), keys, and values.
+
+    Returns
+    -------
+    num : jnp.ndarray, shape (BH, n_leaf, c, D)
+        Unnormalised attention numerator per leaf block.
+    den : jnp.ndarray, shape (BH, n_leaf, c)
+        Softmax denominator partial sums.
+    m : jnp.ndarray, shape (BH, n_leaf, c)
+        Per-row running max (for the numerically stable merge with the
+        far-field contributions).
+    """
     return hattention_nearfield(q, k, v)

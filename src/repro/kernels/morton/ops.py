@@ -6,9 +6,22 @@ import jax.numpy as jnp
 from .kernel import TILE, morton_encode_t
 
 
-
 def morton_encode_pallas(coords: jnp.ndarray):
-    """coords: (N, d) -> (hi, lo) uint32 of shape (N,)."""
+    """64-bit Morton (Z-order) codes of a point set (paper §4.4).
+
+    Parameters
+    ----------
+    coords : jnp.ndarray, shape (N, d)
+        Points in the unit box ``[0, 1]^d`` (out-of-range coordinates clip
+        to the boundary code).
+
+    Returns
+    -------
+    hi, lo : jnp.ndarray, uint32, shape (N,)
+        High and low 32-bit halves of each 64-bit interleaved code.  The
+        lane dimension is padded to a multiple of ``TILE`` for the kernel
+        and sliced back before returning.
+    """
     n, d = coords.shape
     n_pad = ((n + TILE - 1) // TILE) * TILE
     coords_t = jnp.swapaxes(coords, 0, 1)

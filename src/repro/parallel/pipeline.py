@@ -18,20 +18,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.parallel.mesh_ctx import shard_map_compat as _shard_map
+
 # --- version compat -------------------------------------------------------
-# jax >= 0.5 exposes ``jax.shard_map`` and ``lax.pvary``; 0.4.x only has
-# ``jax.experimental.shard_map.shard_map`` and no pvary (its replication
-# checker is disabled instead, which pvary exists to satisfy).
-
-
-def _shard_map(f, *, mesh, in_specs, out_specs):
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs)
-    from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=False)
-
+# jax >= 0.5 exposes ``lax.pvary``; 0.4.x has no pvary (shard_map_compat
+# disables its replication checker instead, which pvary exists to satisfy).
 
 _pvary = getattr(lax, "pvary", None) or (lambda x, axes: x)
 

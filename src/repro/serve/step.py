@@ -11,6 +11,9 @@ SINGLE ``make_apply`` launch (multi-RHS matmat), so heavy traffic pays the
 batched block work once per panel instead of once per user.
 ``HMatrixSolveServer`` does the same for regression-FIT traffic: a panel of
 target vectors is solved by one fused ``make_solver`` while_loop launch.
+Both servers take an optional device ``mesh``: panels are then sharded
+column-wise over the mesh (``repro.parallel.hshard``) and the panel width
+is rounded UP to a multiple of the device count so every shard is full.
 """
 from __future__ import annotations
 
@@ -46,6 +49,17 @@ def make_decode_step(cfg):
     return decode_step
 
 
+def _mesh_panel_width(max_batch: int, mesh) -> int:
+    """Round the panel width up so mesh shards are full (R_pad % n_dev == 0)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    if mesh is None:
+        return max_batch
+    from repro.parallel.hshard import pad_panel_width
+    from repro.parallel.mesh_ctx import mesh_axes, mesh_axes_size
+    return pad_panel_width(max_batch, mesh_axes_size(mesh, mesh_axes(mesh)))
+
+
 class HMatrixServer:
     """Micro-batching front-end over the batched H-matrix executor.
 
@@ -54,30 +68,63 @@ class HMatrixServer:
     server runs exactly one compiled (N, max_batch) matmat program no
     matter the instantaneous load (no per-load recompiles, the same
     static-shape discipline as the LM decode path).
+
+    Parameters
+    ----------
+    hm : HMatrix
+        Assembled H-matrix to serve.
+    max_batch : int, optional
+        Panel width.  With a ``mesh`` it is rounded UP to the next multiple
+        of the mesh device count (see ``self.max_batch`` for the effective
+        value).
+    use_pallas : bool, optional
+        Route the hot loops through the Pallas kernels.
+    mesh : jax.sharding.Mesh, optional
+        Shard each panel column-wise over this mesh
+        (``repro.parallel.hshard``); panels then execute on every device.
     """
 
     def __init__(self, hm: HMatrix, max_batch: int = 64,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, mesh=None):
         self.n = hm.shape[0]
-        self.max_batch = max_batch
-        self._apply = make_apply(hm, use_pallas=use_pallas)
+        self.max_batch = _mesh_panel_width(max_batch, mesh)
+        self._apply = make_apply(hm, use_pallas=use_pallas, mesh=mesh)
 
     def serve(self, queries) -> list:
-        """queries: iterable of (N,) vectors -> list of (N,) results.
+        """Apply the operator to a batch of queries, in panels.
 
-        Packs into ceil(len/max_batch) panels; each panel is one device
-        launch.  Packing and zero-padding happen ONCE on host in a single
-        (N, max_batch) buffer (one host->device transfer per panel, instead
-        of a per-query transfer + on-device stack/concat), and results come
-        back in one host fetch per panel (instead of R per-column device
-        slices).
+        Parameters
+        ----------
+        queries : iterable of array_like, shape (N,)
+            Query vectors in the original point order.
+
+        Returns
+        -------
+        results : list of np.ndarray, shape (N,)
+            ``H @ q`` per query, in input order.  A load larger than
+            ``max_batch`` is SPLIT into ``ceil(len / max_batch)`` panels
+            (never truncated); each panel is one device launch.  Packing
+            and zero-padding happen ONCE on host in a single
+            (N, max_batch) buffer (one host->device transfer per panel,
+            instead of a per-query transfer + on-device stack/concat), and
+            results come back in one host fetch per panel (instead of R
+            per-column device slices).
         """
         return _serve_in_panels(queries, self.n, self.max_batch,
                                 lambda panel: self._apply(panel))
 
 
 def _serve_in_panels(vectors, n: int, max_batch: int, launch) -> list:
-    """Shared micro-batching front-end: host-pack -> launch -> host-unpack."""
+    """Shared micro-batching front-end: host-pack -> launch -> host-unpack.
+
+    A request batch larger than ``max_batch`` is split into multiple panels
+    — every query in, every result out, whatever the load.  Truncation is
+    impossible by construction: each chunk is a ``max_batch``-stride slice,
+    so the ``panel[:, :len(chunk)]`` packing assignment can never drop
+    columns (pinned by ``test_serve_panel_packing_never_truncates``).
+    """
+    if max_batch < 1:
+        raise ValueError(f"panel width must be >= 1, got {max_batch}")
     qs = [np.asarray(q, dtype=np.float32) for q in vectors]
     for q in qs:
         if q.shape != (n,):
@@ -103,22 +150,52 @@ class HMatrixSolveServer:
     batched matmat over all ``max_batch`` columns.  Per-request
     convergence records land in ``last_info`` (one
     :class:`repro.solve.SolveInfo` per launched panel).
+
+    Parameters
+    ----------
+    hm : HMatrix
+        Assembled H-matrix defining ``A``.
+    sigma2 : float
+        Regularization shift (ridge parameter).
+    max_batch : int, optional
+        Panel width; with a ``mesh`` rounded UP to a multiple of the mesh
+        device count.
+    tol, max_iter, precondition, use_pallas
+        Forwarded to :func:`repro.solve.make_solver`.
+    mesh : jax.sharding.Mesh, optional
+        Shard each panel's columns (and their independent CG runs) over
+        this mesh; the solve's only collective is the all-reduced
+        "any column active" loop predicate.
     """
 
     def __init__(self, hm: HMatrix, sigma2: float, max_batch: int = 8,
                  tol: float = 1e-5, max_iter: int = 300,
-                 precondition: bool = True, use_pallas: bool = False):
+                 precondition: bool = True, use_pallas: bool = False,
+                 mesh=None):
         self.n = hm.shape[0]
-        self.max_batch = max_batch
+        self.max_batch = _mesh_panel_width(max_batch, mesh)
         self.last_info: list = []
         self._solve = make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
                                   precondition=precondition,
-                                  use_pallas=use_pallas)
+                                  use_pallas=use_pallas, mesh=mesh)
 
     def serve(self, targets) -> list:
-        """targets: iterable of (N,) rhs vectors -> list of (N,) coefficient
-        vectors.  Zero-padded columns converge instantly (their active mask
-        starts False), so short panels cost no extra iterations."""
+        """Solve ``(A + sigma^2 I) c = f`` for a batch of targets, in panels.
+
+        Parameters
+        ----------
+        targets : iterable of array_like, shape (N,)
+            Right-hand-side vectors in the original point order.
+
+        Returns
+        -------
+        results : list of np.ndarray, shape (N,)
+            Coefficient vectors per target, in input order.  Loads larger
+            than ``max_batch`` are split into multiple panels (never
+            truncated).  Zero-padded columns converge instantly (their
+            active mask starts False), so short panels cost no extra
+            iterations.
+        """
         self.last_info = []
 
         def launch(panel):

@@ -3,9 +3,15 @@
 Public API:
     make_solver      batched multi-RHS preconditioned CG as ONE jitted
                      ``lax.while_loop`` over the inlined H-matrix apply
+                     (``mesh=`` shards the panel over a device mesh)
     host_loop_cg     the pre-fusion host-Python CG loop (benchmark baseline)
     SolveInfo        per-solve convergence record
+    build_preconditioner, pcg_tree_ordered
+                     setup / traceable-loop building blocks (shared with
+                     ``repro.parallel.hshard``)
 """
-from .cg import SolveInfo, host_loop_cg, make_solver
+from .cg import (SolveInfo, build_preconditioner, host_loop_cg, make_solver,
+                 pcg_tree_ordered)
 
-__all__ = ["make_solver", "host_loop_cg", "SolveInfo"]
+__all__ = ["make_solver", "host_loop_cg", "SolveInfo",
+           "build_preconditioner", "pcg_tree_ordered"]

@@ -38,6 +38,13 @@ Padded tail.  ``n_pad > n`` rows (duplicated points) are masked out of the
 operator and the preconditioner output, so the iteration runs exactly on
 the leading ``(n, n)`` principal submatrix system; the pad stays zero in
 ``x/r/p`` by induction.
+
+Multi-device.  The traceable loop body is factored out as
+:func:`pcg_tree_ordered` with a pluggable ``reduce_any`` hook on the
+"any column still active" predicate.  ``repro.parallel.hshard`` wraps it in
+a ``shard_map`` over a device mesh (RHS columns sharded across devices,
+the predicate ``psum``-reduced so every device runs the same trip count);
+``make_solver(..., mesh=...)`` is the front door to that path.
 """
 from __future__ import annotations
 
@@ -84,37 +91,87 @@ def host_loop_cg(matmat: Callable, b: jnp.ndarray, tol: float = 1e-5,
     return x, max_iter
 
 
-def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
-                max_iter: int = 300, precondition: bool = True,
-                use_pallas: bool = False) -> Callable:
-    """Return ``solve(F) -> (C, SolveInfo)`` for ``(A + sigma2 I) C = F``.
+def build_preconditioner(hm: HMatrix, sigma2: float,
+                         use_pallas: bool = False) -> jnp.ndarray:
+    """Cholesky-factorize the block-Jacobi preconditioner once at setup.
 
-    ``F`` may be a single target ``(N,)`` or a panel ``(N, R)``; ``C`` has
-    the same shape.  One compiled program per distinct R: permute in, run
-    the active-mask PCG ``while_loop`` to completion on device, permute
-    out.  Convergence is per-column absolute: ``||r_j||_2 < tol``.
+    Parameters
+    ----------
+    hm : HMatrix
+        Assembled H-matrix; supplies the inadmissible diagonal leaf blocks.
+    sigma2 : float
+        Regularization shift added to each diagonal block before
+        factorization (also makes the padded-tail blocks SPD).
+    use_pallas : bool, optional
+        Route the factorization through the ``batched_block_solve`` Pallas
+        kernel instead of the jnp oracle.
 
-    Setup (once, outside the loop): with ``precondition`` the diagonal leaf
-    blocks ``A_ii + sigma2 I`` are Cholesky-factorized — via the
-    ``batched_block_solve`` Pallas kernel when ``use_pallas`` else the jnp
-    oracle — and the factors ride into the solve as runtime arguments.
+    Returns
+    -------
+    chol : jnp.ndarray, shape (n_leaf, c, c)
+        Lower Cholesky factors of ``A_ii + sigma2 I`` per leaf cluster, in
+        tree order — ready for :func:`pcg_tree_ordered`'s per-iteration
+        ``z = M^{-1} r`` triangular solves.
     """
-    tree, plan, kernel, k = hm.tree, hm.plan, hm.kernel, hm.k
+    c = hm.plan.c_leaf
+    blocks = diagonal_blocks(hm) + sigma2 * jnp.eye(c, dtype=hm.tree.points.dtype)
+    if use_pallas:
+        from repro.kernels.batched_block_solve.ops import batched_block_cholesky
+        return batched_block_cholesky(blocks)
+    from repro.kernels.batched_block_solve.ref import batched_block_cholesky_ref
+    return batched_block_cholesky_ref(blocks)
+
+
+def pcg_tree_ordered(tree, plan, kernel, k: int, use_pallas: bool,
+                     sigma2: float, tol2: float, max_iter: int,
+                     points: jnp.ndarray, factors, chol_arg,
+                     b_pad: jnp.ndarray, reduce_any: Callable = jnp.any):
+    """Traceable active-mask PCG ``while_loop`` on a TREE-ordered panel.
+
+    This is the shared loop body of the single-device solver
+    (:func:`make_solver`) and the mesh-sharded solver
+    (``repro.parallel.hshard.make_sharded_solver``): no permutations, no
+    jit — callers wrap it.
+
+    Parameters
+    ----------
+    tree, plan, kernel, k : ClusterTree, HMatrixPlan, Callable, int
+        The H-matrix structure (static; closed over by the caller's jit).
+    use_pallas : bool
+        Route the hot loops through the Pallas kernels.
+    sigma2, tol2, max_iter : float, float, int
+        Regularization shift, SQUARED absolute residual tolerance, and the
+        iteration cap.
+    points : jnp.ndarray, shape (n_pad, d)
+        Tree-ordered coordinates, passed as a runtime argument (NOT a traced
+        constant — see :func:`repro.core.hmatrix.make_apply`).
+    factors : dict | None
+        ``level -> (U, V)`` stored ACA factors (P mode) or None (NP mode).
+    chol_arg : jnp.ndarray | None
+        Block-Jacobi factors from :func:`build_preconditioner`, or None for
+        plain CG.
+    b_pad : jnp.ndarray, shape (n_pad, R)
+        Tree-ordered right-hand-side panel with a zeroed padded tail.
+    reduce_any : Callable, optional
+        Reduction mapping the ``(R,)`` active mask to the loop predicate.
+        ``jnp.any`` on one device; the sharded path passes a ``psum``-based
+        all-reduce so every device agrees on the trip count.
+
+    Returns
+    -------
+    x_pad : jnp.ndarray, shape (n_pad, R)
+        Solution panel in tree ordering (padded tail zero).
+    it : jnp.ndarray, int32 scalar
+        while_loop trips until all columns froze.
+    iters_col : jnp.ndarray, int32, shape (R,)
+        Trips until each column froze.
+    rr : jnp.ndarray, shape (R,)
+        Final squared residual norms ``||r_j||_2^2``.
+    """
     n, n_pad = tree.n, tree.n_pad
     c = plan.c_leaf
     n_leaf = n_pad // c
-    tol2 = float(tol) * float(tol)
-
-    if precondition:
-        blocks = diagonal_blocks(hm) + sigma2 * jnp.eye(c, dtype=tree.points.dtype)
-        if use_pallas:
-            from repro.kernels.batched_block_solve.ops import batched_block_cholesky
-            chol = batched_block_cholesky(blocks)
-        else:
-            from repro.kernels.batched_block_solve.ref import batched_block_cholesky_ref
-            chol = batched_block_cholesky_ref(blocks)
-    else:
-        chol = None
+    r_width = b_pad.shape[1]
 
     def _mask(v):
         if n_pad == n:
@@ -122,61 +179,117 @@ def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
         pad_rows = jnp.arange(n_pad)[:, None] < n
         return jnp.where(pad_rows, v, 0.0)
 
+    def apply_op(v):
+        z = apply_in_tree_order(tree, plan, kernel, k, use_pallas,
+                                points, factors, v)
+        return _mask(z + sigma2 * v)
+
+    def prec(r):
+        if chol_arg is None:
+            return r
+        rb = r.reshape(n_leaf, c, r_width)
+        if use_pallas:
+            from repro.kernels.batched_block_solve.ops import (
+                batched_block_cholesky_solve)
+            y = batched_block_cholesky_solve(chol_arg, rb)
+        else:
+            from repro.kernels.batched_block_solve.ref import (
+                batched_block_cholesky_solve_ref)
+            y = batched_block_cholesky_solve_ref(chol_arg, rb)
+        return _mask(y.reshape(n_pad, r_width))
+
+    r0 = b_pad                                           # x0 = 0
+    z0 = prec(r0)
+    rr0 = jnp.sum(r0 * r0, axis=0)                       # (R,) ||r||^2
+    rs0 = jnp.sum(r0 * z0, axis=0)                       # (R,) r^T z
+    active0 = rr0 > tol2
+    state0 = (jnp.zeros_like(b_pad), r0, z0, rs0, rr0, active0,
+              jnp.asarray(0, jnp.int32), jnp.zeros_like(rr0, jnp.int32))
+
+    def cond(state):
+        _, _, _, _, _, active, it, _ = state
+        return jnp.logical_and(reduce_any(active), it < max_iter)
+
+    def body(state):
+        x, r, p, rs, rr, active, it, iters_col = state
+        ap = apply_op(p)
+        den = jnp.sum(p * ap, axis=0)
+        ok = active & (den > 0)
+        alpha = jnp.where(ok, rs / jnp.where(ok, den, 1.0), 0.0)
+        x = x + alpha[None, :] * p
+        r = r - alpha[None, :] * ap
+        rr_new = jnp.where(active, jnp.sum(r * r, axis=0), rr)
+        z = prec(r)
+        rs_new = jnp.sum(r * z, axis=0)
+        still = active & (rr_new > tol2)
+        beta = jnp.where(still, rs_new / jnp.where(active, rs, 1.0), 0.0)
+        p = jnp.where(still[None, :], z + beta[None, :] * p, p)
+        rs = jnp.where(still, rs_new, rs)
+        iters_col = jnp.where(active, it + 1, iters_col)
+        return x, r, p, rs, rr_new, still, it + 1, iters_col
+
+    x, r, _, _, rr, _, it, iters_col = jax.lax.while_loop(cond, body, state0)
+    return x, it, iters_col, rr
+
+
+def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
+                max_iter: int = 300, precondition: bool = True,
+                use_pallas: bool = False, mesh=None, axis=None) -> Callable:
+    """Build the fused solver for ``(A + sigma2 I) C = F``.
+
+    Parameters
+    ----------
+    hm : HMatrix
+        Assembled H-matrix (``build_hmatrix``), defining ``A``.
+    sigma2 : float
+        Regularization shift (ridge parameter).
+    tol : float, optional
+        Per-column ABSOLUTE residual tolerance: column ``j`` freezes once
+        ``||r_j||_2 < tol``.
+    max_iter : int, optional
+        Iteration cap for the ``while_loop``.
+    precondition : bool, optional
+        Apply block-Jacobi preconditioning from the inadmissible diagonal
+        leaf blocks (factorized once at setup, see
+        :func:`build_preconditioner`).
+    use_pallas : bool, optional
+        Route the hot loops (H-apply + block solves) through the Pallas
+        kernels.
+    mesh : jax.sharding.Mesh, optional
+        When given, return the MULTI-DEVICE solver instead: the RHS panel is
+        sharded column-wise over the mesh via ``shard_map`` and the PCG
+        predicate is all-reduced so devices stay in lockstep (see
+        ``repro.parallel.hshard.make_sharded_solver``).
+    axis : str | tuple, optional
+        Mesh axis (or axes) to shard over; default all axes of ``mesh``.
+        Ignored without ``mesh``.
+
+    Returns
+    -------
+    solve : Callable
+        ``solve(F) -> (C, SolveInfo)``.  ``F`` may be a single target
+        ``(N,)`` or a panel ``(N, R)``; ``C`` has the same shape.  One
+        compiled program per distinct R: permute in, run the active-mask
+        PCG ``while_loop`` to completion on device, permute out.
+    """
+    if mesh is not None:
+        from repro.parallel.hshard import make_sharded_solver
+        return make_sharded_solver(hm, sigma2, mesh, axis=axis, tol=tol,
+                                   max_iter=max_iter,
+                                   precondition=precondition,
+                                   use_pallas=use_pallas)
+
+    tree, plan, kernel, k = hm.tree, hm.plan, hm.kernel, hm.k
+    n = tree.n
+    tol2 = float(tol) * float(tol)
+    chol = build_preconditioner(hm, sigma2, use_pallas) if precondition else None
+
     @jax.jit
     def _solve(points, factors, chol_arg, b):
         b_pad = permute_to_tree(tree, b)                     # (n_pad, R), 0 tail
-        r_width = b_pad.shape[1]
-
-        def apply_op(v):
-            z = apply_in_tree_order(tree, plan, kernel, k, use_pallas,
-                                    points, factors, v)
-            return _mask(z + sigma2 * v)
-
-        def prec(r):
-            if chol_arg is None:
-                return r
-            rb = r.reshape(n_leaf, c, r_width)
-            if use_pallas:
-                from repro.kernels.batched_block_solve.ops import (
-                    batched_block_cholesky_solve)
-                y = batched_block_cholesky_solve(chol_arg, rb)
-            else:
-                from repro.kernels.batched_block_solve.ref import (
-                    batched_block_cholesky_solve_ref)
-                y = batched_block_cholesky_solve_ref(chol_arg, rb)
-            return _mask(y.reshape(n_pad, r_width))
-
-        r0 = b_pad                                           # x0 = 0
-        z0 = prec(r0)
-        rr0 = jnp.sum(r0 * r0, axis=0)                       # (R,) ||r||^2
-        rs0 = jnp.sum(r0 * z0, axis=0)                       # (R,) r^T z
-        active0 = rr0 > tol2
-        state0 = (jnp.zeros_like(b_pad), r0, z0, rs0, rr0, active0,
-                  jnp.asarray(0, jnp.int32), jnp.zeros_like(rr0, jnp.int32))
-
-        def cond(state):
-            _, _, _, _, _, active, it, _ = state
-            return jnp.logical_and(jnp.any(active), it < max_iter)
-
-        def body(state):
-            x, r, p, rs, rr, active, it, iters_col = state
-            ap = apply_op(p)
-            den = jnp.sum(p * ap, axis=0)
-            ok = active & (den > 0)
-            alpha = jnp.where(ok, rs / jnp.where(ok, den, 1.0), 0.0)
-            x = x + alpha[None, :] * p
-            r = r - alpha[None, :] * ap
-            rr_new = jnp.where(active, jnp.sum(r * r, axis=0), rr)
-            z = prec(r)
-            rs_new = jnp.sum(r * z, axis=0)
-            still = active & (rr_new > tol2)
-            beta = jnp.where(still, rs_new / jnp.where(active, rs, 1.0), 0.0)
-            p = jnp.where(still[None, :], z + beta[None, :] * p, p)
-            rs = jnp.where(still, rs_new, rs)
-            iters_col = jnp.where(active, it + 1, iters_col)
-            return x, r, p, rs, rr_new, still, it + 1, iters_col
-
-        x, r, _, _, rr, _, it, iters_col = jax.lax.while_loop(cond, body, state0)
+        x, it, iters_col, rr = pcg_tree_ordered(
+            tree, plan, kernel, k, use_pallas, sigma2, tol2, max_iter,
+            points, factors, chol_arg, b_pad)
         return permute_from_tree(tree, x), it, iters_col, jnp.sqrt(rr)
 
     def solve(f: jnp.ndarray):
