@@ -62,6 +62,9 @@ def run(n: int = 16384, r: int = 8, c_leaf: int = 256, k: int = 16,
         solver(F)  # compile
         t0 = time.perf_counter()
         x, info = solver(F)
+        # solve() and SolveInfo are now LAZY (async dispatch, no host sync):
+        # block explicitly, or the clock stops at dispatch time
+        jax.block_until_ready(x)
         t = time.perf_counter() - t0
         # recompute the TRUE residual (as for the host variant) so the
         # recorded residual_max fields are comparable across variants

@@ -14,8 +14,8 @@ import sys
 import traceback
 
 from . import (bench_batching, bench_compare, bench_complexity,
-               bench_convergence, bench_matmat, bench_roofline, bench_shard,
-               bench_solve)
+               bench_convergence, bench_matmat, bench_roofline, bench_serve,
+               bench_shard, bench_solve)
 
 
 def main() -> None:
@@ -34,6 +34,8 @@ def main() -> None:
          else bench_solve.run()),
         ("shard", lambda: bench_shard.run(n=2048 if args.quick else 8192,
                                           r=16 if args.quick else 64)),
+        ("serve", lambda: bench_serve.run(smoke=True) if args.quick
+         else bench_serve.run()),
         ("fig16-17", lambda: bench_compare.run(n=4096 if args.quick else 8192)),
         ("roofline", lambda: bench_roofline.run()),
     ]

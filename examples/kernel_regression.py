@@ -16,6 +16,7 @@ near-field actually dominates conditioning and block-Jacobi pays off.
 """
 import time
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import build_hmatrix, halton, make_apply, sinusoid_targets
@@ -36,6 +37,8 @@ def main():
     solver = make_solver(hm, sigma2, tol=1e-3, max_iter=300, precondition=True)
     t0 = time.perf_counter()
     coef, info = solver(F)
+    # the solve and its SolveInfo are lazy: block before stopping the clock
+    jax.block_until_ready(coef)
     dt = time.perf_counter() - t0
     print(f"fused PCG: {info.iterations} iterations, {dt:.2f}s incl. compile "
           f"({dt / F.shape[1]:.2f}s amortized per target); "

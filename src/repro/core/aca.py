@@ -123,6 +123,13 @@ def aca_adaptive(a: jnp.ndarray, eps: float, k_max: int, eta: float = 0.0):
         if nu * nv <= eps * (1.0 - eta) / (1.0 + eps) * np.sqrt(max(frob_sq, 0.0)):
             rank = r + 1
             break
-        if col_mask.any():
-            j_r = int(np.argmax(np.where(col_mask, np.abs(v_r), -1.0)))
+        if not (row_mask.any() and col_mask.any()):
+            # every row or column pivot is consumed: the cross approximation
+            # is complete.  Keeping the stale j_r here would re-cross an
+            # already-consumed column whose residual is float-noise (far
+            # above the 1e-300 alpha guard), normalizing garbage into the
+            # next rank-1 term — clamp the rank and stop instead.
+            rank = r + 1
+            break
+        j_r = int(np.argmax(np.where(col_mask, np.abs(v_r), -1.0)))
     return U[:, :rank], V[:, :rank], rank

@@ -379,11 +379,10 @@ def make_sharded_solver(hm: HMatrix, sigma2: float, mesh: Mesh, axis=None,
         x, it, iters_col, res = _solve(
             tree.points, factors, chol_tuple,
             _pad_columns(fp, pad_panel_width(r, n_dev)))
-        x, iters_col, res = x[:, :r], iters_col[:r], res[:r]
-        info = SolveInfo(iterations=int(it),
-                         iters_per_column=np.asarray(iters_col),
-                         residual_norms=np.asarray(res),
-                         converged=bool(np.all(np.asarray(res) < tol)))
+        x = x[:, :r]
+        # lazy SolveInfo over the device arrays (pad columns sliced off on
+        # device): no host sync in the launch path, launches can overlap
+        info = SolveInfo(it, iters_col[:r], res[:r], tol)
         return (x[:, 0] if f.ndim == 1 else x), info
 
     return solve

@@ -1,0 +1,397 @@
+"""Async panel-serving runtime: queue -> scheduler -> double buffer -> fetch.
+
+The paper's lesson (§5.4) is that H-matrix throughput on many-core hardware
+comes from keeping the device saturated with batched work; Boukaram et al.
+(arXiv:1902.01829) get their matvec rates by overlapping marshaling with
+execution.  The synchronous panel loop (``serve.step._serve_in_panels``)
+defeats both: each panel is packed, launched, and fetched to completion
+before the next panel is even packed, so the device idles during host
+pack/unpack and the host idles during compute.
+
+:class:`PanelRuntime` is the asynchronous replacement shared by
+``HMatrixServer`` and ``HMatrixSolveServer``:
+
+* **Request queue.**  :meth:`submit` accepts one ``(N,)`` vector and
+  returns a :class:`PanelFuture` immediately.  An optional ``max_queue``
+  bounds the number of not-yet-launched requests — ``submit`` blocks until
+  the scheduler drains below the cap (backpressure, so producers cannot
+  outrun the device unboundedly).
+* **Panel scheduler.**  A daemon thread packs pending requests into
+  fixed-width panels and launches each one as soon as it is full.  JAX
+  async dispatch returns device arrays without blocking, so panel k+1 is
+  being packed on host while panel k still computes on device.
+* **Double-buffered staging + launches.**  At most ``max_inflight``
+  (default 2) panels are outstanding on device; the scheduler blocks on
+  the oldest before taking new work.  One panel computes while the next
+  packs — and under overload the block lets the queue coalesce into WIDER
+  panels (width adapts to load) instead of flooding the device with
+  narrow fixed-cost launches.  Packing cycles through one host staging
+  array PER in-flight slot (the pinned-memory pattern): the pacing block
+  guarantees the launch that read a buffer has completed before that
+  buffer is repacked, which is what makes the zero-copy ``jnp.asarray``
+  upload safe (on CPU it can alias host memory).
+* **Deadline flush.**  With ``deadline_s`` set, a partial panel is flushed
+  once its OLDEST request has waited that long — bounding latency under
+  trickle traffic instead of waiting forever for a full panel.
+* **Bucketed panel widths.**  Partial panels are padded to the smallest
+  width in :func:`panel_width_buckets` (~``{R/4, R/2, R}``, each rounded
+  up to the mesh device count via ``hshard.pad_panel_width`` so sharded
+  meshes still get full shards) instead of always paying full-width
+  padding; :meth:`precompile` warms every bucket so no real request pays
+  the compile.
+* **Lazy fetch.**  The launch result stays a device array inside a shared
+  per-panel record; the blocking ``np.asarray`` fetch happens at most once
+  per panel, deferred until the first ``PanelFuture.result()`` for that
+  panel is awaited.
+
+Futures resolve in submission order (panels launch FIFO; columns within a
+panel preserve arrival order) and — because the sync path packs identical
+panels via the same width buckets — results are bit-identical to
+``serve.step``'s synchronous loop (pinned by ``tests/test_serve_async.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# width fractions of the full panel pre-compiled for partial flushes
+_BUCKET_FRACTIONS = (4, 2, 1)
+
+
+def panel_width_buckets(max_batch: int, n_dev: int = 1) -> tuple:
+    """Increasing panel widths {~R/4, ~R/2, R}, each a multiple of ``n_dev``.
+
+    Partial panels pad to the smallest sufficient bucket instead of the
+    full width, so a deadline flush of 3 requests on a 64-wide server runs
+    a 16-wide program, not a 64-wide one.  With a device mesh every bucket
+    is rounded UP via ``repro.parallel.hshard.pad_panel_width`` so shards
+    stay full.  Duplicates collapse (e.g. ``max_batch=4, n_dev=4`` -> one
+    bucket), and the largest bucket is always exactly ``max_batch``.
+    """
+    if max_batch < 1:
+        raise ValueError(f"panel width must be >= 1, got {max_batch}")
+    if max_batch % n_dev != 0:
+        raise ValueError(f"panel width {max_batch} not a multiple of the "
+                         f"device count {n_dev}")
+    from repro.parallel.hshard import pad_panel_width
+    widths = {pad_panel_width(-(-max_batch // frac), n_dev)
+              for frac in _BUCKET_FRACTIONS}
+    widths.add(max_batch)
+    return tuple(sorted(w for w in widths if w <= max_batch))
+
+
+def width_for(count: int, widths: Sequence[int]) -> int:
+    """Smallest bucket width >= ``count`` (``count`` <= the largest bucket)."""
+    for w in widths:
+        if w >= count:
+            return w
+    raise ValueError(f"{count} requests exceed the panel width {widths[-1]}")
+
+
+class _PanelRecord:
+    """One launched panel, shared by the futures of its columns.
+
+    Holds the device result of the launch; the first ``host()`` call does
+    the single blocking ``np.asarray`` fetch and caches it for every other
+    column of the panel.
+    """
+
+    __slots__ = ("_dev", "_host", "_lock")
+
+    def __init__(self, dev):
+        self._dev = dev
+        self._host = None
+        self._lock = threading.Lock()
+
+    def host(self) -> np.ndarray:
+        with self._lock:
+            if self._host is None:
+                self._host = np.asarray(self._dev)
+                self._dev = None
+            return self._host
+
+
+class PanelFuture:
+    """Result handle for one submitted request.
+
+    ``done()`` turns True when the request's panel has been LAUNCHED (the
+    device result exists; it may still be computing).  ``result()`` blocks
+    until then, fetches the panel to host (once, shared across the panel's
+    futures), and returns this request's ``(N,)`` column.
+    """
+
+    __slots__ = ("_event", "_record", "_col", "_exc", "t_submit")
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._record = None
+        self._col = 0
+        self._exc = None
+        self.t_submit = time.monotonic()
+
+    def _resolve(self, record: _PanelRecord, col: int):
+        self._record, self._col = record, col
+        self._event.set()
+
+    def _fail(self, exc: BaseException):
+        self._exc = exc
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError("panel not launched within timeout")
+        if self._exc is not None:
+            raise self._exc
+        return self._record.host()[:, self._col]
+
+
+class PanelRuntime:
+    """Asynchronous micro-batching runtime over one panel launch callable.
+
+    Parameters
+    ----------
+    n : int
+        Request vector length (the H-matrix size).
+    max_batch : int
+        Full panel width.  Must already be a multiple of ``n_dev``.
+    launch : Callable
+        ``launch(panel)`` taking a ``(n, w)`` ``jnp`` panel (``w`` one of
+        ``self.widths``) and returning the ``(n, w)`` DEVICE result without
+        blocking on it (any host sync inside ``launch`` serializes the
+        pipeline — see ``repro.solve.SolveInfo`` for how the solver's
+        metadata stays lazy).  A failing ``launch`` must raise BEFORE
+        dispatching device work that reads the panel (the staging-buffer
+        reuse invariant assumes a raised launch holds no reference).
+    n_dev : int, optional
+        Mesh device count; every width bucket is a multiple of it.
+    deadline_s : float, optional
+        Flush a partial panel once its oldest request has waited this
+        long.  ``None`` (default) means partial panels launch only on
+        :meth:`flush` / :meth:`drain` / :meth:`close`.
+    max_queue : int, optional
+        Backpressure cap on not-yet-launched requests; ``submit`` blocks
+        while the queue is at the cap.  ``None`` (default) = unbounded.
+    max_inflight : int, optional
+        Double-buffered launch depth: at most this many panels outstanding
+        on device.  Before taking new work the scheduler blocks on the
+        OLDEST outstanding panel, so one panel computes while the next
+        packs/uploads — and under overload the block lets pending requests
+        coalesce into WIDER panels (width adapts to load) instead of
+        flooding the device queue with narrow fixed-cost launches.
+
+    Attributes
+    ----------
+    widths : tuple of int
+        The pre-compilable panel width buckets (see
+        :func:`panel_width_buckets`).
+    stats : dict
+        ``launched_widths`` (bounded deque, most recent panels),
+        ``panels_launched`` (running total), ``max_queue_depth``,
+        ``backpressure_waits``.
+    """
+
+    def __init__(self, n: int, max_batch: int, launch: Callable,
+                 n_dev: int = 1, deadline_s: float | None = None,
+                 max_queue: int | None = None, max_inflight: int = 2):
+        if max_queue is not None and max_queue < max_batch:
+            raise ValueError(f"max_queue ({max_queue}) must be >= "
+                             f"max_batch ({max_batch})")
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.n = int(n)
+        self.max_batch = int(max_batch)
+        self.widths = panel_width_buckets(max_batch, n_dev)
+        self.deadline_s = deadline_s
+        self.max_queue = max_queue
+        self.max_inflight = max_inflight
+        # launched_widths is bounded (always-on servers launch forever);
+        # panels_launched is the running total
+        self.stats = {"launched_widths": deque(maxlen=1024),
+                      "panels_launched": 0, "max_queue_depth": 0,
+                      "backpressure_waits": 0}
+        self._inflight: list = []       # device results of outstanding panels
+        self._launch = launch
+        # one staging buffer per in-flight slot: the launch pacing in
+        # _scheduler guarantees a buffer's previous launch completed
+        # before the buffer comes around again for repacking
+        self._staging = [np.zeros((self.n, self.max_batch), np.float32)
+                         for _ in range(max_inflight)]
+        self._buf = 0
+        self._pending: list = []        # [(np vector, PanelFuture, t_arrival)]
+        self._cv = threading.Condition()
+        self._flush_goal = 0            # launch until this many have launched
+        self._launched = 0              # requests launched so far (FIFO count)
+        self._submitted = 0
+        self._in_launch = False
+        self._closing = False
+        self._thread: threading.Thread | None = None
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, vec) -> PanelFuture:
+        """Enqueue one request vector; returns its future immediately.
+
+        Blocks only for backpressure (``max_queue``); never for the device.
+        """
+        q = np.asarray(vec, dtype=np.float32)
+        if q.shape != (self.n,):
+            raise ValueError(f"request shape {q.shape} != ({self.n},)")
+        fut = PanelFuture()
+        with self._cv:
+            if self._closing:
+                raise RuntimeError("runtime is closed")
+            while (self.max_queue is not None
+                   and len(self._pending) >= self.max_queue):
+                self.stats["backpressure_waits"] += 1
+                self._cv.wait()
+                if self._closing:
+                    raise RuntimeError("runtime is closed")
+            self._pending.append((q, fut, time.monotonic()))
+            self._submitted += 1
+            depth = len(self._pending)
+            if depth > self.stats["max_queue_depth"]:
+                self.stats["max_queue_depth"] = depth
+            self._ensure_thread()
+            self._cv.notify_all()
+        return fut
+
+    def flush(self):
+        """Launch everything already submitted, partial panels included."""
+        with self._cv:
+            self._flush_goal = max(self._flush_goal, self._submitted)
+            self._cv.notify_all()
+
+    def drain(self):
+        """Flush, then block until every submitted request has LAUNCHED.
+
+        (Launched, not fetched: results are still awaited per future.)
+        """
+        self.flush()
+        with self._cv:
+            self._cv.wait_for(
+                lambda: (not self._pending and not self._in_launch)
+                or self._closing)
+
+    def precompile(self):
+        """Warm the launch callable on a zero panel per width bucket, so no
+        real request pays the jit compile."""
+        for w in self.widths:
+            z = jnp.asarray(np.zeros((self.n, w), np.float32))
+            jax.block_until_ready(self._launch(z))
+
+    def queue_depth(self) -> int:
+        with self._cv:
+            return len(self._pending)
+
+    def close(self):
+        """Drain pending requests, then stop the scheduler thread."""
+        self.drain()
+        with self._cv:
+            self._closing = True
+            self._cv.notify_all()
+            thread = self._thread
+        if thread is not None:
+            thread.join(timeout=10)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- scheduler side -----------------------------------------------------
+
+    def _ensure_thread(self):
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._scheduler, name="panel-runtime", daemon=True)
+            self._thread.start()
+
+    def _next_deadline(self) -> float | None:
+        if self.deadline_s is None or not self._pending:
+            return None
+        return self._pending[0][2] + self.deadline_s
+
+    def _scheduler(self):
+        while True:
+            # double-buffered launch pacing: block on the oldest in-flight
+            # panel BEFORE taking new work.  While blocked, arrivals keep
+            # queueing, so the next panel packs wider under load.
+            while len(self._inflight) >= self.max_inflight:
+                try:
+                    jax.block_until_ready(self._inflight.pop(0))
+                except Exception:
+                    # async dispatch defers device failures to the first
+                    # block: the panel's awaiters hit the same error at
+                    # their np.asarray fetch — do not let it kill the
+                    # scheduler thread (pending requests would strand and
+                    # close() would deadlock)
+                    pass
+            with self._cv:
+                while True:
+                    if self._closing:
+                        return
+                    if len(self._pending) >= self.max_batch:
+                        break                       # full panel ready
+                    if self._pending and self._launched < self._flush_goal:
+                        break                       # flushed partial panel
+                    deadline = self._next_deadline()
+                    if deadline is not None:
+                        wait = deadline - time.monotonic()
+                        if wait <= 0:
+                            break                   # deadline-expired panel
+                        self._cv.wait(wait)
+                    else:
+                        self._cv.wait()
+                chunk = self._pending[:self.max_batch]
+                del self._pending[:len(chunk)]
+                self._launched += len(chunk)
+                self._in_launch = True
+                self._cv.notify_all()               # wake backpressured submits
+            try:
+                self._launch_panel(chunk)
+            finally:
+                with self._cv:
+                    self._in_launch = False
+                    self._cv.notify_all()           # wake drain()
+
+    def _launch_panel(self, chunk):
+        w = width_for(len(chunk), self.widths)
+        buf = self._staging[self._buf]
+        for j, (q, _, _) in enumerate(chunk):
+            buf[:, j] = q
+        if len(chunk) < w:
+            buf[:, len(chunk):w] = 0.0              # stale pad from last reuse
+        try:
+            # jnp.asarray on CPU can zero-copy ALIAS the staging buffer —
+            # safe ONLY because of the pacing invariant: this buffer's
+            # previous launch was block_until_ready'd before this repack
+            # (max_inflight slots, max_inflight buffers, strict FIFO), so
+            # no still-computing program is reading the memory we rewrote.
+            dev = self._launch(jnp.asarray(buf[:, :w]))
+        except Exception as exc:                    # propagate to awaiters
+            # _buf deliberately NOT advanced: nothing holds this buffer (a
+            # failing launch must raise before dispatching work that reads
+            # the panel), and advancing without an _inflight entry would
+            # desynchronize the buffer rotation from the pacing FIFO —
+            # the next rotation could then repack a buffer whose launch is
+            # still computing.
+            for _, fut, _ in chunk:
+                fut._fail(exc)
+            return
+        record = _PanelRecord(dev)
+        self._inflight.append(dev)                  # scheduler-thread only
+        self._buf = (self._buf + 1) % len(self._staging)
+        self.stats["launched_widths"].append(w)
+        self.stats["panels_launched"] += 1
+        for j, (_, fut, _) in enumerate(chunk):
+            fut._resolve(record, j)

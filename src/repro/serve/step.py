@@ -14,8 +14,22 @@ target vectors is solved by one fused ``make_solver`` while_loop launch.
 Both servers take an optional device ``mesh``: panels are then sharded
 column-wise over the mesh (``repro.parallel.hshard``) and the panel width
 is rounded UP to a multiple of the device count so every shard is full.
+
+Each server owns one :class:`repro.serve.runtime.PanelRuntime` and exposes
+BOTH serving modes over the same compiled launch:
+
+  * ``serve(batch)`` — the synchronous reference path: pack, launch, fetch,
+    panel by panel (``_serve_in_panels``).
+  * ``submit(vec) -> PanelFuture`` / ``flush()`` / ``serve_async(batch)`` —
+    the asynchronous path: requests queue up, the runtime's scheduler packs
+    double-buffered panels and launches them WITHOUT fetching, so panel
+    k+1 is packed while panel k computes; results fetch lazily when each
+    future is awaited.  Both modes pack identical panels (same width
+    buckets), so their results are bit-identical.
 """
 from __future__ import annotations
+
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +37,7 @@ import numpy as np
 
 from repro.core.hmatrix import HMatrix, make_apply
 from repro.models.api import get_model
+from repro.serve.runtime import PanelRuntime, width_for
 from repro.solve import make_solver
 
 
@@ -49,6 +64,14 @@ def make_decode_step(cfg):
     return decode_step
 
 
+def _mesh_n_dev(mesh) -> int:
+    """Device count of a panel mesh (1 without a mesh)."""
+    if mesh is None:
+        return 1
+    from repro.parallel.mesh_ctx import mesh_axes, mesh_axes_size
+    return mesh_axes_size(mesh, mesh_axes(mesh))
+
+
 def _mesh_panel_width(max_batch: int, mesh) -> int:
     """Round the panel width up so mesh shards are full (R_pad % n_dev == 0)."""
     if max_batch < 1:
@@ -56,16 +79,75 @@ def _mesh_panel_width(max_batch: int, mesh) -> int:
     if mesh is None:
         return max_batch
     from repro.parallel.hshard import pad_panel_width
-    from repro.parallel.mesh_ctx import mesh_axes, mesh_axes_size
-    return pad_panel_width(max_batch, mesh_axes_size(mesh, mesh_axes(mesh)))
+    return pad_panel_width(max_batch, _mesh_n_dev(mesh))
 
 
-class HMatrixServer:
+class _PanelServerBase:
+    """Shared serving front-end: one launch callable, two serving modes.
+
+    Subclasses set ``self._launch`` (the ``(N, w) -> (N, w)`` device launch)
+    before calling ``_init_runtime``.  ``serve`` is the synchronous
+    reference loop; ``submit``/``flush``/``serve_async`` go through the
+    shared :class:`repro.serve.runtime.PanelRuntime`.  Both pack the same
+    width-bucketed panels, so results are bit-identical across modes.
+    """
+
+    def _init_runtime(self, n: int, max_batch: int, n_dev: int,
+                      deadline_s, max_queue):
+        self.runtime = PanelRuntime(n, max_batch, self._launch, n_dev=n_dev,
+                                    deadline_s=deadline_s,
+                                    max_queue=max_queue)
+
+    @property
+    def widths(self) -> tuple:
+        """Pre-compilable panel width buckets (partial panels pad to these)."""
+        return self.runtime.widths
+
+    def serve(self, batch) -> list:
+        """Synchronous reference path: pack -> launch -> fetch, per panel."""
+        return _serve_in_panels(batch, self.n, self.max_batch, self._launch,
+                                widths=self.runtime.widths)
+
+    def submit(self, vec):
+        """Enqueue one request; returns a ``PanelFuture`` immediately (the
+        runtime launches a panel whenever one fills, or on deadline/flush)."""
+        return self.runtime.submit(vec)
+
+    def flush(self):
+        """Launch any partial panel now (e.g. end of a request burst)."""
+        self.runtime.flush()
+
+    def serve_async(self, batch) -> list:
+        """Submit a whole batch, flush, and return its futures (in order).
+
+        Panels overlap: while panel k computes, panel k+1 packs and
+        launches; nothing fetches until a future is awaited.
+        """
+        futures = [self.submit(q) for q in batch]
+        self.flush()
+        return futures
+
+    def precompile(self):
+        """Compile every panel width bucket on a zero panel up front."""
+        self.runtime.precompile()
+
+    def close(self):
+        """Drain the queue and stop the runtime's scheduler thread."""
+        self.runtime.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class HMatrixServer(_PanelServerBase):
     """Micro-batching front-end over the batched H-matrix executor.
 
     Queries (vectors the operator is applied to) are collected into panels
     of a FIXED width ``max_batch`` — short panels are zero-padded — so the
-    server runs exactly one compiled (N, max_batch) matmat program no
+    server runs one compiled matmat program per panel width bucket no
     matter the instantaneous load (no per-load recompiles, the same
     static-shape discipline as the LM decode path).
 
@@ -82,13 +164,23 @@ class HMatrixServer:
     mesh : jax.sharding.Mesh, optional
         Shard each panel column-wise over this mesh
         (``repro.parallel.hshard``); panels then execute on every device.
+    deadline_s : float, optional
+        Async mode: flush a partial panel once its oldest request has
+        waited this long (latency bound under trickle traffic).
+    max_queue : int, optional
+        Async mode: backpressure cap on queued-but-unlaunched requests.
     """
 
     def __init__(self, hm: HMatrix, max_batch: int = 64,
-                 use_pallas: bool = False, mesh=None):
+                 use_pallas: bool = False, mesh=None,
+                 deadline_s: float | None = None,
+                 max_queue: int | None = None):
         self.n = hm.shape[0]
         self.max_batch = _mesh_panel_width(max_batch, mesh)
         self._apply = make_apply(hm, use_pallas=use_pallas, mesh=mesh)
+        self._launch = self._apply
+        self._init_runtime(self.n, self.max_batch, _mesh_n_dev(mesh),
+                           deadline_s, max_queue)
 
     def serve(self, queries) -> list:
         """Apply the operator to a batch of queries, in panels.
@@ -104,24 +196,29 @@ class HMatrixServer:
             ``H @ q`` per query, in input order.  A load larger than
             ``max_batch`` is SPLIT into ``ceil(len / max_batch)`` panels
             (never truncated); each panel is one device launch.  Packing
-            and zero-padding happen ONCE on host in a single
-            (N, max_batch) buffer (one host->device transfer per panel,
-            instead of a per-query transfer + on-device stack/concat), and
-            results come back in one host fetch per panel (instead of R
-            per-column device slices).
+            and zero-padding happen ONCE on host in a staging buffer
+            REUSED across panels (one host->device transfer per panel),
+            the ragged tail pads only to its width bucket, and results
+            come back in one host fetch per panel.
         """
-        return _serve_in_panels(queries, self.n, self.max_batch,
-                                lambda panel: self._apply(panel))
+        return super().serve(queries)
 
 
-def _serve_in_panels(vectors, n: int, max_batch: int, launch) -> list:
-    """Shared micro-batching front-end: host-pack -> launch -> host-unpack.
+def _serve_in_panels(vectors, n: int, max_batch: int, launch,
+                     widths=None) -> list:
+    """Shared synchronous micro-batching loop: pack -> launch -> unpack.
 
     A request batch larger than ``max_batch`` is split into multiple panels
     — every query in, every result out, whatever the load.  Truncation is
     impossible by construction: each chunk is a ``max_batch``-stride slice,
     so the ``panel[:, :len(chunk)]`` packing assignment can never drop
     columns (pinned by ``test_serve_panel_packing_never_truncates``).
+
+    The ``(n, max_batch)`` staging buffer is allocated once and REUSED
+    across panels (pad columns re-zeroed per panel); with ``widths`` the
+    ragged tail panel pads only to its smallest sufficient width bucket.
+    An empty request list returns ``[]`` without touching the buffer or
+    the launch.
     """
     if max_batch < 1:
         raise ValueError(f"panel width must be >= 1, got {max_batch}")
@@ -129,17 +226,25 @@ def _serve_in_panels(vectors, n: int, max_batch: int, launch) -> list:
     for q in qs:
         if q.shape != (n,):
             raise ValueError(f"query shape {q.shape} != ({n},)")
+    if not qs:
+        return []                                   # no launch for no work
     out: list = []
+    buf = np.zeros((n, max_batch), np.float32)      # ONE reused staging buffer
     for start in range(0, len(qs), max_batch):
         chunk = qs[start:start + max_batch]
-        panel = np.zeros((n, max_batch), np.float32)    # pad in the buffer
-        panel[:, :len(chunk)] = np.stack(chunk, axis=1)
-        z = np.asarray(launch(jnp.asarray(panel)))      # one fetch
+        w = width_for(len(chunk), widths) if widths else max_batch
+        for j, q in enumerate(chunk):
+            buf[:, j] = q
+        if len(chunk) < w:
+            buf[:, len(chunk):w] = 0.0              # re-zero pad after reuse
+        # zero-copy aliasing of buf is safe HERE (unlike the async runtime):
+        # the fetch below completes the computation before the next repack
+        z = np.asarray(launch(jnp.asarray(buf[:, :w])))      # one fetch
         out.extend(z[:, j] for j in range(len(chunk)))
     return out
 
 
-class HMatrixSolveServer:
+class HMatrixSolveServer(_PanelServerBase):
     """Micro-batching front-end over the FUSED H-matrix solver.
 
     The regression-fit analogue of :class:`HMatrixServer`: incoming
@@ -147,9 +252,16 @@ class HMatrixSolveServer:
     ``(A + sigma^2 I) c = f``, paper §1 eq. 1) are packed into fixed-width
     panels and each panel is solved by a SINGLE ``make_solver`` launch —
     one compiled ``while_loop`` program per panel, every CG iteration one
-    batched matmat over all ``max_batch`` columns.  Per-request
-    convergence records land in ``last_info`` (one
-    :class:`repro.solve.SolveInfo` per launched panel).
+    batched matmat over all panel columns.  Per-panel convergence records
+    land in ``last_info`` (one LAZY :class:`repro.solve.SolveInfo` per
+    launched panel — recording one costs no device sync, which is what
+    lets solve launches overlap; reading its attributes fetches it).
+
+    ``serve`` resets ``last_info`` per call; the async path
+    (``submit``/``flush``) APPENDS one record per launched panel.
+    ``last_info`` is a bounded deque (``LAST_INFO_MAX`` most recent
+    panels): an always-on async server launches panels indefinitely, and
+    unread lazy records would otherwise pin their device metadata forever.
 
     Parameters
     ----------
@@ -166,18 +278,32 @@ class HMatrixSolveServer:
         Shard each panel's columns (and their independent CG runs) over
         this mesh; the solve's only collective is the all-reduced
         "any column active" loop predicate.
+    deadline_s, max_queue
+        Async-mode knobs, as :class:`HMatrixServer`.
     """
+
+    LAST_INFO_MAX = 256          # panels of convergence history to retain
 
     def __init__(self, hm: HMatrix, sigma2: float, max_batch: int = 8,
                  tol: float = 1e-5, max_iter: int = 300,
                  precondition: bool = True, use_pallas: bool = False,
-                 mesh=None):
+                 mesh=None, deadline_s: float | None = None,
+                 max_queue: int | None = None):
         self.n = hm.shape[0]
         self.max_batch = _mesh_panel_width(max_batch, mesh)
-        self.last_info: list = []
+        self.last_info = deque(maxlen=self.LAST_INFO_MAX)
         self._solve = make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
                                   precondition=precondition,
                                   use_pallas=use_pallas, mesh=mesh)
+
+        def launch(panel):
+            c, info = self._solve(panel)
+            self.last_info.append(info)             # lazy: no device sync
+            return c
+
+        self._launch = launch
+        self._init_runtime(self.n, self.max_batch, _mesh_n_dev(mesh),
+                           deadline_s, max_queue)
 
     def serve(self, targets) -> list:
         """Solve ``(A + sigma^2 I) c = f`` for a batch of targets, in panels.
@@ -196,14 +322,13 @@ class HMatrixSolveServer:
             active mask starts False), so short panels cost no extra
             iterations.
         """
-        self.last_info = []
+        self.last_info = deque(maxlen=self.LAST_INFO_MAX)
+        return super().serve(targets)
 
-        def launch(panel):
-            c, info = self._solve(panel)
-            self.last_info.append(info)
-            return c
-
-        return _serve_in_panels(targets, self.n, self.max_batch, launch)
+    def precompile(self):
+        """Warm every width bucket; the warmup panels' records are dropped."""
+        super().precompile()
+        self.last_info = deque(maxlen=self.LAST_INFO_MAX)
 
 
 def greedy_sample(logits, vocab_size: int):

@@ -5,7 +5,9 @@ Public API:
                      ``lax.while_loop`` over the inlined H-matrix apply
                      (``mesh=`` shards the panel over a device mesh)
     host_loop_cg     the pre-fusion host-Python CG loop (benchmark baseline)
-    SolveInfo        per-solve convergence record
+    SolveInfo        LAZY per-solve convergence record: holds device
+                     arrays, materializes on first attribute access or
+                     ``.fetch()`` (so launches can overlap)
     build_preconditioner, pcg_tree_ordered
                      setup / traceable-loop building blocks (shared with
                      ``repro.parallel.hshard``)

@@ -48,7 +48,7 @@ the predicate ``psum``-reduced so every device runs the same trip count);
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import threading
 from typing import Callable
 
 import jax
@@ -59,14 +59,72 @@ from repro.core.clustering import permute_from_tree, permute_to_tree
 from repro.core.hmatrix import HMatrix, apply_in_tree_order, diagonal_blocks
 
 
-@dataclass(frozen=True)
 class SolveInfo:
-    """Convergence record of one fused solve (fetched AFTER the solve)."""
+    """LAZY convergence record of one fused solve.
 
-    iterations: int              # while_loop trips until all columns froze
-    iters_per_column: np.ndarray  # (R,) trips until each column froze
-    residual_norms: np.ndarray   # (R,) final ||b - (A + s^2 I) x||_2
-    converged: bool              # all columns below tol within max_iter
+    Construction stores the solver's DEVICE arrays as-is — no ``int()`` /
+    ``np.asarray()`` — so building a ``SolveInfo`` never blocks on the
+    device.  This is what lets panel launches overlap: the serving runtime
+    can launch solve k+1 while solve k still computes, because recording
+    solve k's metadata no longer forces a device->host sync inside the
+    launch.  The attributes below materialize (and cache) the host values
+    on first access; :meth:`fetch` forces all of them explicitly.
+
+    Attributes
+    ----------
+    iterations : int
+        while_loop trips until all columns froze.
+    iters_per_column : np.ndarray, shape (R,)
+        Trips until each column froze.
+    residual_norms : np.ndarray, shape (R,)
+        Final ``||b - (A + sigma^2 I) x||_2`` per column.
+    converged : bool
+        All columns below ``tol`` within ``max_iter``.
+    """
+
+    __slots__ = ("_it", "_iters_col", "_res", "_tol", "_host", "_lock")
+
+    def __init__(self, iterations, iters_per_column, residual_norms,
+                 tol: float):
+        self._it = iterations
+        self._iters_col = iters_per_column
+        self._res = residual_norms
+        self._tol = float(tol)
+        self._host = None
+        # the async serve path shares records across the scheduler thread
+        # and any number of awaiting clients: first-fetch must be atomic
+        self._lock = threading.Lock()
+
+    def fetch(self) -> "SolveInfo":
+        """Materialize every field on host (ONE blocking read) and return self."""
+        with self._lock:
+            if self._host is None:
+                self._host = (int(self._it), np.asarray(self._iters_col),
+                              np.asarray(self._res))
+                self._it = self._iters_col = self._res = None  # drop dev refs
+        return self
+
+    @property
+    def iterations(self) -> int:
+        return self.fetch()._host[0]
+
+    @property
+    def iters_per_column(self) -> np.ndarray:
+        return self.fetch()._host[1]
+
+    @property
+    def residual_norms(self) -> np.ndarray:
+        return self.fetch()._host[2]
+
+    @property
+    def converged(self) -> bool:
+        return bool(np.all(self.residual_norms < self._tol))
+
+    def __repr__(self) -> str:                     # never forces the sync
+        if self._host is None:
+            return "SolveInfo(<pending on device>)"
+        return (f"SolveInfo(iterations={self._host[0]}, "
+                f"converged={self.converged})")
 
 
 def host_loop_cg(matmat: Callable, b: jnp.ndarray, tol: float = 1e-5,
@@ -270,7 +328,10 @@ def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
         ``solve(F) -> (C, SolveInfo)``.  ``F`` may be a single target
         ``(N,)`` or a panel ``(N, R)``; ``C`` has the same shape.  One
         compiled program per distinct R: permute in, run the active-mask
-        PCG ``while_loop`` to completion on device, permute out.
+        PCG ``while_loop`` to completion on device, permute out.  Both
+        ``C`` and the :class:`SolveInfo` hold DEVICE arrays — nothing
+        syncs until they are read (``np.asarray(C)`` / an info attribute /
+        ``info.fetch()``), so launches can overlap.
     """
     if mesh is not None:
         from repro.parallel.hshard import make_sharded_solver
@@ -298,10 +359,9 @@ def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
                              f"H-matrix of size ({n}, {n})")
         fp = f[:, None] if f.ndim == 1 else f
         x, it, iters_col, res = _solve(tree.points, hm.factors, chol, fp)
-        info = SolveInfo(iterations=int(it),
-                         iters_per_column=np.asarray(iters_col),
-                         residual_norms=np.asarray(res),
-                         converged=bool(np.all(np.asarray(res) < tol)))
+        # device arrays go straight into the lazy SolveInfo: no host sync
+        # here, so back-to-back solve launches overlap (async dispatch)
+        info = SolveInfo(it, iters_col, res, tol)
         return (x[:, 0] if f.ndim == 1 else x), info
 
     return solve

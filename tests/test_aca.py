@@ -66,6 +66,25 @@ def test_adaptive_aca_stopping(rng):
     assert err < 1e-5
 
 
+@pytest.mark.parametrize("m,n", [(6, 6), (4, 8), (8, 4)])
+def test_adaptive_aca_rank_clamped_when_kmax_exceeds_block(m, n):
+    """k_max > min(m, n): once every row/column pivot is consumed the loop
+    must STOP (rank clamped to min(m, n)), not keep the stale pivot and
+    re-cross an already-consumed column — the residual there is float
+    noise far above the alpha guard, so the old loop normalized garbage
+    into extra rank-1 terms past the true rank."""
+    # local rng, NOT the session fixture: consuming shared draws here would
+    # shift the random systems every later test file sees
+    a = np.random.RandomState(7).randn(m, n)        # full rank min(m, n) a.s.
+    u, v, rank = aca_adaptive(a, eps=0.0, k_max=2 * max(m, n))
+    assert rank <= min(m, n)
+    assert u.shape == (m, rank) and v.shape == (n, rank)
+    # a full cross of a full-rank block reproduces it (near) exactly
+    err = np.linalg.norm(a - u @ v.T) / np.linalg.norm(a)
+    assert err < 1e-10, err
+    assert np.all(np.isfinite(u)) and np.all(np.isfinite(v))
+
+
 def test_degenerate_zero_block():
     """All-zero block: ACA must return zeros, not NaNs."""
     rows = jnp.zeros((16, 2), jnp.float32)

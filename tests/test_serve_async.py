@@ -1,0 +1,329 @@
+"""Async panel-serving runtime (`repro.serve.runtime`) vs the synchronous
+panel loop: submission-order futures, bit-identical results (even + ragged
+loads, with and without a mesh), deadline-based partial flush, backpressure,
+and the serve-layer staging/empty-input fixes.
+
+Mesh tests run the same two ways as tests/test_shard.py: directly under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI async job),
+or via the ``slow``-marked subprocess self-runner at the bottom so the
+plain tier-1 suite covers them on one-device machines.
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import build_hmatrix, halton, make_apply
+from repro.serve.runtime import (PanelRuntime, panel_width_buckets,
+                                 width_for)
+from repro.serve.step import (HMatrixServer, HMatrixSolveServer,
+                              _serve_in_panels)
+from repro.solve import make_solver
+
+N_DEV = 4
+requires_mesh = pytest.mark.skipif(
+    jax.device_count() < N_DEV,
+    reason=f"needs >= {N_DEV} devices "
+           f"(XLA_FLAGS=--xla_force_host_platform_device_count={N_DEV})")
+
+SIGMA2 = 0.5
+
+
+def _system(n, r, seed=0):
+    # local rng, NOT the session `rng` fixture: consuming shared draws here
+    # would shift the random systems every later test file sees (the fused
+    # solve tests assert iteration counts that depend on them)
+    rng = np.random.RandomState(seed)
+    pts = halton(n, 2)
+    F = jnp.asarray(rng.randn(n, r).astype(np.float32))
+    hm = build_hmatrix(pts, "gaussian", k=16, c_leaf=128, precompute=True)
+    return hm, F
+
+
+# ---------------------------------------------------------------------------
+# width buckets
+# ---------------------------------------------------------------------------
+
+
+def test_panel_width_buckets():
+    assert panel_width_buckets(64) == (16, 32, 64)
+    assert panel_width_buckets(8) == (2, 4, 8)
+    assert panel_width_buckets(4) == (1, 2, 4)
+    # mesh: every bucket a multiple of the device count, duplicates collapse
+    assert panel_width_buckets(8, n_dev=4) == (4, 8)
+    assert panel_width_buckets(4, n_dev=4) == (4,)
+    with pytest.raises(ValueError):
+        panel_width_buckets(0)
+    with pytest.raises(ValueError):
+        panel_width_buckets(6, n_dev=4)     # width not a multiple of n_dev
+
+
+def test_width_for():
+    assert width_for(1, (1, 2, 4)) == 1
+    assert width_for(3, (1, 2, 4)) == 4
+    assert width_for(4, (1, 2, 4)) == 4
+    with pytest.raises(ValueError):
+        width_for(5, (1, 2, 4))
+
+
+# ---------------------------------------------------------------------------
+# futures: order + bit-identity vs the sync path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_queries", [8, 11])   # even: 2 full panels; ragged
+def test_async_matches_sync_bit_identical(n_queries):
+    """Futures resolve in submission order and every result is BIT-identical
+    to the synchronous panel loop: both modes pack the same width-bucketed
+    panels, so they run the same compiled programs on the same bytes."""
+    hm, F = _system(600, 11)
+    queries = [np.asarray(F[:, j]) for j in range(n_queries)]
+    with HMatrixServer(hm, max_batch=4) as srv:
+        sync = srv.serve(queries)
+        futures = srv.serve_async(queries)
+        outs = [f.result(timeout=60) for f in futures]
+    assert len(outs) == n_queries
+    for j in range(n_queries):
+        np.testing.assert_array_equal(outs[j], sync[j])
+    # ragged tail buckets below full width in BOTH modes (bit-identity above
+    # holds because the widths agree)
+    tail = n_queries % 4 or 4
+    assert list(srv.runtime.stats["launched_widths"]) == \
+        [4] * (n_queries // 4) + ([width_for(tail, srv.widths)]
+                                  if n_queries % 4 else [])
+    assert srv.runtime.stats["panels_launched"] == -(-n_queries // 4)
+
+
+def test_async_solve_server_matches_sync():
+    """Solve traffic: async == sync bit-identically, one LAZY SolveInfo per
+    launched panel, and reading info attributes still works (materializes
+    on first access — satellite 1's contract)."""
+    hm, F = _system(600, 6)
+    targets = [np.asarray(F[:, j]) for j in range(6)]
+    with HMatrixSolveServer(hm, SIGMA2, max_batch=4, tol=1e-6,
+                            max_iter=400) as srv:
+        sync = srv.serve(targets)
+        assert len(srv.last_info) == 2              # serve() resets per call
+        futures = srv.serve_async(targets)
+        outs = [f.result(timeout=120) for f in futures]
+        assert len(srv.last_info) == 4              # async appends per panel
+        for j in range(6):
+            np.testing.assert_array_equal(outs[j], sync[j])
+        for info in srv.last_info:
+            assert info.converged
+            assert info.iterations == info.iters_per_column.max()
+            assert isinstance(info.iters_per_column, np.ndarray)
+
+
+def test_lazy_solveinfo_defers_fetch():
+    """make_solver returns device arrays + a SolveInfo that holds DEVICE
+    metadata until first access (or .fetch()) — no host sync in the launch."""
+    hm, F = _system(512, 3)
+    x, info = make_solver(hm, SIGMA2, tol=1e-6, max_iter=400)(F)
+    assert info._host is None                      # nothing materialized yet
+    assert "pending" in repr(info)                 # repr never forces a sync
+    assert info._host is None
+    assert info.fetch() is info
+    assert info._host is not None
+    assert isinstance(info.iterations, int)
+    assert info.iters_per_column.shape == (3,)
+    assert info.residual_norms.shape == (3,)
+    assert info.converged
+    assert "pending" not in repr(info)
+
+
+# ---------------------------------------------------------------------------
+# runtime behaviors: deadline flush, backpressure, validation
+# ---------------------------------------------------------------------------
+
+
+def _echo_runtime(n=32, **kw):
+    """Runtime over a trivial device launch (no H-matrix needed)."""
+    return PanelRuntime(n, kw.pop("max_batch", 8),
+                        lambda panel: panel * 2.0, **kw)
+
+
+def test_deadline_flush_serves_short_panel():
+    """With deadline_s set and NO explicit flush, a partial panel launches
+    once its oldest request has waited out the deadline — padded only to
+    its width bucket, not the full panel width."""
+    with _echo_runtime(deadline_s=0.05) as rt:
+        vecs = [np.full(32, j, np.float32) for j in range(3)]
+        futures = [rt.submit(v) for v in vecs]
+        outs = [f.result(timeout=30) for f in futures]
+    for j in range(3):
+        np.testing.assert_array_equal(outs[j], vecs[j] * 2.0)
+    assert list(rt.stats["launched_widths"]) == [4]  # bucket for 3 of max 8
+
+
+def test_backpressure_caps_queue_depth():
+    """max_queue bounds the not-yet-launched queue: a flood of submits
+    against a slow launch blocks at the cap instead of growing unboundedly,
+    and every request still completes correctly."""
+    def slow_launch(panel):
+        time.sleep(0.03)
+        return panel * 2.0
+
+    rt = PanelRuntime(32, 2, slow_launch, max_queue=4)
+    vecs = [np.full(32, j, np.float32) for j in range(20)]
+    futures = []
+
+    def producer():
+        for v in vecs:
+            futures.append(rt.submit(v))
+
+    t = threading.Thread(target=producer)
+    t.start()
+    t.join(timeout=60)
+    assert not t.is_alive()
+    rt.flush()
+    outs = [f.result(timeout=60) for f in futures]
+    rt.close()
+    for j in range(20):
+        np.testing.assert_array_equal(outs[j], vecs[j] * 2.0)
+    assert rt.stats["max_queue_depth"] <= 4
+    assert rt.stats["backpressure_waits"] > 0
+    with pytest.raises(ValueError):
+        PanelRuntime(32, 8, lambda p: p, max_queue=4)   # cap below one panel
+
+
+def test_submit_validates_and_close_rejects():
+    rt = _echo_runtime()
+    with pytest.raises(ValueError):
+        rt.submit(np.zeros(33, np.float32))
+    f = rt.submit(np.ones(32, np.float32))
+    rt.close()
+    np.testing.assert_array_equal(f.result(timeout=10),
+                                  np.full(32, 2.0, np.float32))
+    with pytest.raises(RuntimeError):
+        rt.submit(np.ones(32, np.float32))
+
+
+def test_launch_error_propagates_to_futures():
+    def broken_launch(panel):
+        raise RuntimeError("device on fire")
+
+    rt = PanelRuntime(16, 2, broken_launch)
+    f = rt.submit(np.zeros(16, np.float32))
+    rt.flush()
+    with pytest.raises(RuntimeError, match="device on fire"):
+        f.result(timeout=30)
+    rt.close()
+
+
+def test_future_timeout():
+    with _echo_runtime() as rt:                    # never fills, never flushed
+        f = rt.submit(np.zeros(32, np.float32))
+        with pytest.raises(TimeoutError):
+            f.result(timeout=0.05)
+        rt.flush()
+        f.result(timeout=30)
+
+
+# ---------------------------------------------------------------------------
+# serve-layer staging fixes (satellite: buffer reuse + empty input)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_load_returns_without_launch():
+    """An empty request list must return [] WITHOUT any launch — on the
+    sync loop, the servers, and the async path."""
+    def boom(panel):
+        raise AssertionError("launch must not run for empty input")
+
+    assert _serve_in_panels([], 64, 4, boom) == []
+    hm, _ = _system(512, 1)
+    with HMatrixServer(hm, max_batch=4) as srv:
+        srv._launch = boom
+        assert srv.serve([]) == []
+        assert srv.serve_async([]) == []
+
+
+def test_reused_staging_buffer_rezeroes_pad():
+    """The sync loop reuses ONE staging buffer across panels; a ragged tail
+    panel after a full panel must see zero pad columns, not the previous
+    panel's stale data."""
+    seen = []
+
+    def spy_launch(panel):
+        seen.append(np.asarray(panel))
+        return panel
+
+    # 4 ones-vectors (full panel), then 3 twos-vectors (tail, bucket w=4)
+    qs = [np.ones(16, np.float32)] * 4 + [np.full(16, 2.0, np.float32)] * 3
+    outs = _serve_in_panels(qs, 16, 4, spy_launch, widths=(1, 2, 4))
+    assert len(outs) == 7 and len(seen) == 2
+    assert seen[1].shape == (16, 4)
+    np.testing.assert_array_equal(seen[1][:, 3], np.zeros(16))  # re-zeroed
+    np.testing.assert_array_equal(outs[6], np.full(16, 2.0))
+
+
+def test_tail_panel_uses_width_bucket():
+    """Sync serve pads the ragged tail to its width bucket, not max_batch."""
+    widths = []
+    qs = [np.ones(16, np.float32)] * 5
+    _serve_in_panels(qs, 16, 16, lambda p: (widths.append(p.shape[1]), p)[1],
+                     widths=(4, 8, 16))
+    assert widths == [8]                           # 5 requests -> bucket 8
+
+
+# ---------------------------------------------------------------------------
+# mesh: async == sync on sharded panels
+# ---------------------------------------------------------------------------
+
+
+@requires_mesh
+def test_async_meshed_servers_match_sync():
+    """With a device mesh, panel widths stay multiples of the device count
+    (full shards) and async results remain bit-identical to sync serve."""
+    from repro.parallel.hshard import make_panel_mesh
+    hm, F = _system(512, 8)
+    mesh = make_panel_mesh(N_DEV)
+
+    with HMatrixServer(hm, max_batch=6, mesh=mesh) as srv:
+        assert srv.max_batch == 8                  # rounded up to the mesh
+        assert all(w % N_DEV == 0 for w in srv.widths)
+        queries = [np.asarray(F[:, j]) for j in range(7)]   # ragged load
+        sync = srv.serve(queries)
+        outs = [f.result(timeout=120) for f in srv.serve_async(queries)]
+        for j in range(7):
+            np.testing.assert_array_equal(outs[j], sync[j])
+        # 7 requests -> one panel at the shardable bucket 8 (buckets: 4, 8)
+        assert list(srv.runtime.stats["launched_widths"]) == [8]
+
+    with HMatrixSolveServer(hm, SIGMA2, max_batch=4, tol=1e-6, max_iter=400,
+                            mesh=mesh) as ssrv:
+        targets = [np.asarray(F[:, j]) for j in range(5)]
+        sync = ssrv.serve(targets)
+        outs = [f.result(timeout=240) for f in ssrv.serve_async(targets)]
+        for j in range(5):
+            np.testing.assert_array_equal(outs[j], sync[j])
+
+
+# ---------------------------------------------------------------------------
+# subprocess self-runner: covers the mesh path in the plain tier-1 suite
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(jax.device_count() >= N_DEV,
+                    reason="mesh tests already ran directly")
+def test_serve_async_suite_under_forced_devices():
+    """Re-run this file under 4 forced host devices (subprocess so the
+    device count never leaks into the other tests — see conftest)."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (flags + " " if flags else "") + \
+        f"--xla_force_host_platform_device_count={N_DEV}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-m", "not slow", __file__],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert " passed" in out.stdout and "skipped" not in out.stdout, out.stdout
