@@ -57,7 +57,9 @@ def run(tag: str | None = ""):
             emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
                  rf["step_time_s"],
                  f"dom={rf['dominant']};frac={rf['roofline_fraction']:.3f}")
-    out = os.path.join(RESULTS, "..", "roofline_table.md")
+    # normpath: RESULTS (results/dryrun) need not exist to write the table
+    out = os.path.normpath(os.path.join(RESULTS, "..", "roofline_table.md"))
+    os.makedirs(os.path.dirname(out), exist_ok=True)
     with open(out, "w") as f:
         f.write("\n".join(lines) + "\n")
     print(f"# wrote {os.path.abspath(out)} ({len(recs)} records)")

@@ -1,0 +1,191 @@
+"""Multi-tenant serving (`repro.serve.tenancy`) under traffic.
+
+Three measurements over apply-backed tenants (each tenant its own
+assembled H-matrix and its own compiled panel programs):
+
+* **1 tenant vs N tenants at EQUAL aggregate load** — the multi-tenancy
+  overhead question: the same total request stream served by one tenant's
+  queue vs split round-robin across N tenants behind the SAME scheduler
+  thread and in-flight budget.  Records aggregate q/s for both, the
+  multi/single throughput ratio, and per-tenant p50/p95 latency in the
+  N-tenant run (completion - submission per request).
+* **Starvation check** — 10:1 skewed two-tenant load at equal weights on
+  one shared in-flight budget: the light tenant must keep making progress
+  while the heavy backlog drains.  Records the light tenant's p50/p95, the
+  heavy tenant's, and the worst interleave gap (max number of consecutive
+  heavy launches between two light launches; deficit round robin should
+  keep it ~1, a starved FIFO would show the whole heavy backlog).
+
+On CPU the numbers measure dispatch-level multiplexing (the JSON carries
+``backend``); the *claims* — near-1x aggregate cost for fan-out across
+tenants, bounded light-tenant latency under skew — are scale-free.  JSON
+lands in ``results/tenancy/``.
+
+    PYTHONPATH=src python -m benchmarks.bench_tenancy [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "tenancy")
+
+
+def _percentiles(lat) -> dict:
+    lat = np.asarray(lat)
+    return {"p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p95_ms": float(np.percentile(lat, 95) * 1e3),
+            "mean_ms": float(lat.mean() * 1e3)}
+
+
+def _build_tenant_specs(n, n_tenants, max_batch, k, c_leaf):
+    """One independently assembled H-matrix per tenant (distinct compiled
+    programs — the real multi-model regime, not one shared operator)."""
+    from repro.core import build_hmatrix, halton
+    from repro.serve.tenancy import apply_tenant
+
+    specs = []
+    for i in range(n_tenants):
+        # per-tenant dataset: same design density, shifted domain scale so
+        # every tenant assembles (and compiles) its own operator
+        pts = halton(n, 2) * (1.0 + 0.25 * i)
+        hm = build_hmatrix(pts, "gaussian", k=k, c_leaf=c_leaf,
+                           precompute=True)
+        specs.append(apply_tenant(hm, max_batch=max_batch))
+    return specs
+
+
+def _serve_split(specs, queries, reps) -> dict:
+    """Serve ``queries`` split round-robin over ``len(specs)`` tenants in
+    one MultiTenantRuntime; median wall time + per-tenant percentiles."""
+    from repro.serve.tenancy import MultiTenantRuntime
+
+    times, per_tenant = [], {}
+    for _ in range(reps):
+        with MultiTenantRuntime() as mtr:
+            handles = [mtr.add_tenant(f"t{i}", spec)
+                       for i, spec in enumerate(specs)]
+            mtr.precompile()
+            t_submit = [None] * len(queries)
+            futures = [None] * len(queries)
+            t0 = time.perf_counter()
+            for j, q in enumerate(queries):
+                t_submit[j] = time.monotonic()
+                futures[j] = handles[j % len(handles)].submit(q)
+            mtr.flush()
+            done = [f.result() is not None and time.monotonic()
+                    for f in futures]
+            times.append(time.perf_counter() - t0)
+            per_tenant = {
+                h.name: _percentiles([d - t for j, (d, t) in
+                                      enumerate(zip(done, t_submit))
+                                      if j % len(handles) == i])
+                for i, h in enumerate(handles)}
+    t_med = sorted(times)[len(times) // 2]
+    return {"t_s": t_med, "qps": len(queries) / t_med,
+            "per_tenant": per_tenant}
+
+
+def _starvation(specs, n_heavy, n_light, reps) -> dict:
+    """10:1 skew: heavy backlog first, light trickle after; both weight 1."""
+    from repro.serve.tenancy import MultiTenantRuntime
+
+    out = []
+    for _ in range(reps):
+        with MultiTenantRuntime() as mtr:
+            heavy = mtr.add_tenant("heavy", specs[0])
+            light = mtr.add_tenant("light", specs[1 % len(specs)])
+            mtr.precompile()
+            rng = np.random.RandomState(0)
+            n = specs[0].n
+            hq = [rng.randn(n).astype(np.float32) for _ in range(n_heavy)]
+            lq = [rng.randn(specs[1 % len(specs)].n).astype(np.float32)
+                  for _ in range(n_light)]
+            t0h = time.monotonic()
+            hf = [heavy.submit(q) for q in hq]
+            mtr.flush()
+            t0 = time.monotonic()
+            lf = [light.submit(q) for q in lq]
+            mtr.flush()
+            l_lat = [f.result() is not None and time.monotonic() - t0
+                     for f in lf]
+            h_lat = [f.result() is not None and time.monotonic() - t0h
+                     for f in hf]
+            order = list(mtr.stats["launch_order"])
+        idx = [i for i, t in enumerate(order) if t == "light"]
+        gaps = ([b - a - 1 for a, b in zip(idx, idx[1:])] if len(idx) > 1
+                else [0])
+        out.append({"light": _percentiles(l_lat),
+                    "heavy": _percentiles(h_lat),
+                    "light_panels": len(idx),
+                    "max_interleave_gap": max(gaps)})
+    out.sort(key=lambda d: d["light"]["p95_ms"])
+    return out[len(out) // 2]
+
+
+def run(n: int = 512, max_batch: int = 8, n_requests: int = 512,
+        n_tenants: int = 4, k: int = 16, c_leaf: int = 128,
+        smoke: bool = False) -> dict:
+    import jax
+
+    if smoke:
+        n, n_requests, n_tenants = 256, 64, 2
+
+    reps = 1 if smoke else 3
+    specs = _build_tenant_specs(n, n_tenants, max_batch, k, c_leaf)
+    rng = np.random.RandomState(1)
+    queries = [rng.randn(n).astype(np.float32) for _ in range(n_requests)]
+
+    record = {"bench": "tenancy", "n": n, "max_batch": max_batch,
+              "n_requests": n_requests, "n_tenants": n_tenants,
+              "backend": jax.default_backend(), "smoke": smoke}
+
+    # --- 1 tenant vs N tenants, equal aggregate load
+    single = _serve_split(specs[:1], queries, reps)
+    multi = _serve_split(specs, queries, reps)
+    record["single_tenant"] = single
+    record["multi_tenant"] = multi
+    record["multi_vs_single_qps"] = multi["qps"] / single["qps"]
+    emit("tenancy_1tenant", single["t_s"] / n_requests,
+         f"qps={single['qps']:.1f}")
+    emit(f"tenancy_{n_tenants}tenants", multi["t_s"] / n_requests,
+         f"qps={multi['qps']:.1f};vs_single_x{record['multi_vs_single_qps']:.2f}")
+    worst_p95 = max(d["p95_ms"] for d in multi["per_tenant"].values())
+    emit("tenancy_per_tenant_p95", worst_p95 * 1e-3,
+         ";".join(f"{k}={v['p95_ms']:.1f}ms"
+                  for k, v in sorted(multi["per_tenant"].items())))
+
+    # --- starvation: 10:1 skew on a shared budget
+    n_light = max(2 * max_batch, n_requests // 10)
+    sv = _starvation(specs, 10 * n_light, n_light, reps)
+    record["starvation"] = sv
+    emit("tenancy_starvation_light_p95", sv["light"]["p95_ms"] * 1e-3,
+         f"heavy_p95_ms={sv['heavy']['p95_ms']:.1f};"
+         f"max_gap={sv['max_interleave_gap']}")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "tenancy_smoke.json" if smoke
+                       else "tenancy.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI dispatch check)")
+    args = ap.parse_args()
+    rec = run(smoke=args.smoke)
+    ok = rec["starvation"]["max_interleave_gap"] <= 4
+    print(f"# {rec['n_tenants']}-tenant aggregate x"
+          f"{rec['multi_vs_single_qps']:.2f} of single-tenant qps, "
+          f"starvation max_gap={rec['starvation']['max_interleave_gap']}")
+    if not ok:
+        raise SystemExit(1)

@@ -5,7 +5,11 @@ Prints ``name,us_per_call,derived`` CSV rows.  CPU-sized problem sizes
 benchmark reproduces are scale-free (convergence shape, complexity
 exponent, batching speedup factors).
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
+
+``--quick`` shrinks problem sizes for a laptop-scale sweep; ``--smoke``
+runs EVERY registered bench at tiny dispatch-check sizes (the CI floor:
+does each suite still run end to end and write its record).
 """
 from __future__ import annotations
 
@@ -15,16 +19,26 @@ import traceback
 
 from . import (bench_batching, bench_compare, bench_complexity,
                bench_convergence, bench_matmat, bench_roofline, bench_serve,
-               bench_shard, bench_solve)
+               bench_shard, bench_solve, bench_tenancy)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true", help="smaller sizes")
-    args = ap.parse_args()
-
-    print("name,us_per_call,derived")
-    suites = [
+def _suites(args) -> list:
+    if args.smoke:
+        return [
+            ("fig11", lambda: bench_convergence.run(n=512)),
+            ("fig12-13", lambda: bench_complexity.run(ns=(1024, 2048),
+                                                      c_leaf=128)),
+            ("fig14-15", lambda: bench_batching.run(n=2048)),
+            ("matmat", lambda: bench_matmat.run(n=1024, rs=(1, 8))),
+            ("solve", lambda: bench_solve.run(n=1024, domain=16.0,
+                                              c_leaf=128)),
+            ("shard", lambda: bench_shard.run(n=512, r=8)),
+            ("serve", lambda: bench_serve.run(smoke=True)),
+            ("tenancy", lambda: bench_tenancy.run(smoke=True)),
+            ("fig16-17", lambda: bench_compare.run(n=1024)),
+            ("roofline", lambda: bench_roofline.run()),
+        ]
+    return [
         ("fig11", lambda: bench_convergence.run(n=1024 if args.quick else 2048)),
         ("fig12-13", lambda: bench_complexity.run(
             ns=(2048, 4096, 8192) if args.quick else (2048, 4096, 8192, 16384, 32768))),
@@ -36,11 +50,23 @@ def main() -> None:
                                           r=16 if args.quick else 64)),
         ("serve", lambda: bench_serve.run(smoke=True) if args.quick
          else bench_serve.run()),
+        ("tenancy", lambda: bench_tenancy.run(smoke=True) if args.quick
+         else bench_tenancy.run()),
         ("fig16-17", lambda: bench_compare.run(n=4096 if args.quick else 8192)),
         ("roofline", lambda: bench_roofline.run()),
     ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller sizes")
+    ap.add_argument("--smoke", action="store_true",
+                    help="every registered bench at tiny CI sizes")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
     failed = []
-    for name, fn in suites:
+    for name, fn in _suites(args):
         try:
             fn()
         except Exception:

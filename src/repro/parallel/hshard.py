@@ -69,6 +69,19 @@ def pad_panel_width(r: int, n_dev: int) -> int:
     return ((r + n_dev - 1) // n_dev) * n_dev
 
 
+def mesh_device_count(mesh, axis=None) -> int:
+    """Devices along ``axis`` (default ALL axes) of ``mesh``; 1 for no mesh.
+
+    The serving layer's width-rounding contract lives here: a panel front
+    (``serve.step`` servers, ``serve.tenancy`` tenants) with a mesh rounds
+    its panel width UP to a multiple of this count via
+    :func:`pad_panel_width`, so every ``shard_map`` shard stays full.
+    """
+    if mesh is None:
+        return 1
+    return mesh_axes_size(mesh, mesh_axes(mesh, axis))
+
+
 def _replicated_specs(tree_args):
     """A spec pytree matching ``tree_args`` with every leaf replicated."""
     return jax.tree_util.tree_map(lambda _: P(), tree_args)

@@ -44,6 +44,17 @@ pack/unpack and the host idles during compute.
   per panel, deferred until the first ``PanelFuture.result()`` for that
   panel is awaited.
 
+The pacing + staging machinery is factored into two reusable pieces so the
+multi-tenant front-end (``repro.serve.tenancy.MultiTenantRuntime``) can
+host MANY launch targets behind ONE scheduler with ONE global in-flight
+budget:
+
+* :class:`LaunchPacer` — the bounded in-flight FIFO (one per runtime,
+  shared across every tenant of a multi-tenant runtime);
+* :class:`PanelLane` — everything per launch target: width buckets, the
+  staging-buffer pool (one buffer per pacer slot), zero-copy pack/pad,
+  the launch call, and resolving the chunk's futures.
+
 Futures resolve in submission order (panels launch FIFO; columns within a
 panel preserve arrival order) and — because the sync path packs identical
 panels via the same width buckets — results are bit-identical to
@@ -92,6 +103,35 @@ def width_for(count: int, widths: Sequence[int]) -> int:
         if w >= count:
             return w
     raise ValueError(f"{count} requests exceed the panel width {widths[-1]}")
+
+
+def _snapshot(value):
+    """Deep-ish copy of a stats tree: dicts copied, deques become lists."""
+    if isinstance(value, dict):
+        return {k: _snapshot(v) for k, v in value.items()}
+    if isinstance(value, (deque, list, tuple)):
+        return [_snapshot(v) for v in value]
+    return value
+
+
+class _Stats(dict):
+    """Stats counters: a dict for legacy attribute reads, CALLABLE for a
+    consistent snapshot.
+
+    ``runtime.stats["panels_launched"]`` keeps working (the runtime mutates
+    the dict in place, under its condition lock), and ``runtime.stats()``
+    returns a deep copy taken UNDER that lock — deques become plain lists —
+    so a reader never observes a half-updated panel launch or iterates a
+    deque another thread is appending to.
+    """
+
+    def __init__(self, lock, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._lock = lock
+
+    def __call__(self) -> dict:
+        with self._lock:
+            return _snapshot(self)
 
 
 class _PanelRecord:
@@ -154,6 +194,125 @@ class PanelFuture:
         return self._record.host()[:, self._col]
 
 
+class LaunchPacer:
+    """Bounded in-flight launch FIFO: the pacing half of the runtime.
+
+    At most ``max_inflight`` launches are outstanding; before taking new
+    work the scheduler calls :meth:`wait_for_slot`, which retires (blocks
+    on) the OLDEST outstanding launch until a slot frees.  Strictly
+    single-consumer: only the owning scheduler thread may call into it, so
+    it needs no lock.
+
+    The pacer is also the STAGING-BUFFER ALIASING GUARANTEE.  ``jnp.asarray``
+    on CPU can zero-copy alias host memory, so repacking a staging buffer
+    races any still-computing launch that read it.  Retirement here is
+    strict global FIFO, so the outstanding set is always the most recent
+    ``<= max_inflight - 1`` launches (after a :meth:`wait_for_slot`).  A
+    :class:`PanelLane` with ``max_inflight`` staging slots rotates back to
+    a buffer only after ``max_inflight - 1`` NEWER launches of that same
+    lane; if the buffer's old launch were still outstanding, those newer
+    ones would be too — ``>= max_inflight`` outstanding, contradiction.
+    This holds even when MANY lanes (tenants) share one pacer, which is
+    what lets ``MultiTenantRuntime`` enforce one global in-flight budget
+    without per-tenant pacing.
+    """
+
+    def __init__(self, max_inflight: int = 2):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.max_inflight = int(max_inflight)
+        self._inflight: list = []       # device results, launch (FIFO) order
+
+    def __len__(self) -> int:
+        return len(self._inflight)
+
+    def wait_for_slot(self):
+        """Block on the oldest outstanding launch until a slot is free.
+
+        While blocked, arrivals keep queueing, so the next panel packs
+        wider under load (width adapts to overload instead of flooding the
+        device with narrow fixed-cost launches).
+        """
+        while len(self._inflight) >= self.max_inflight:
+            try:
+                jax.block_until_ready(self._inflight.pop(0))
+            except Exception:
+                # async dispatch defers device failures to the first
+                # block: the panel's awaiters hit the same error at
+                # their np.asarray fetch — do not let it kill the
+                # scheduler thread (pending requests would strand and
+                # close() would deadlock)
+                pass
+
+    def commit(self, dev):
+        """Record one freshly dispatched launch (scheduler thread only)."""
+        self._inflight.append(dev)
+
+
+class PanelLane:
+    """Packing lane for ONE launch target: staging pool + width buckets.
+
+    Owns everything per-target about getting a request chunk onto the
+    device: the pre-compilable width buckets, a pool of host staging
+    buffers (one per pacer slot — see :class:`LaunchPacer` for why that
+    size is the aliasing guarantee), zero-copy pack/pad, the launch call,
+    and resolving or failing the chunk's futures.  ``PanelRuntime`` owns
+    one lane; ``MultiTenantRuntime`` owns one lane per tenant, all paced
+    by one shared :class:`LaunchPacer`.
+    """
+
+    def __init__(self, n: int, max_batch: int, launch: Callable,
+                 n_dev: int = 1, slots: int = 2):
+        self.n = int(n)
+        self.max_batch = int(max_batch)
+        self.widths = panel_width_buckets(self.max_batch, n_dev)
+        self._launch = launch
+        self._staging = [np.zeros((self.n, self.max_batch), np.float32)
+                         for _ in range(slots)]
+        self._buf = 0
+
+    def launch_panel(self, chunk, pacer: LaunchPacer) -> int | None:
+        """Pack ``chunk`` into the current staging buffer, pad to its width
+        bucket, launch, and resolve the chunk's futures.
+
+        Scheduler-thread only, and only AFTER ``pacer.wait_for_slot()`` —
+        that ordering is the staging-buffer reuse invariant.  Returns the
+        launched width, or ``None`` when the launch raised (the futures
+        then carry the exception).
+        """
+        w = width_for(len(chunk), self.widths)
+        buf = self._staging[self._buf]
+        for j, (q, _, _) in enumerate(chunk):
+            buf[:, j] = q
+        if len(chunk) < w:
+            buf[:, len(chunk):w] = 0.0              # stale pad from last reuse
+        try:
+            # jnp.asarray on CPU can zero-copy ALIAS the staging buffer —
+            # safe ONLY because of the pacing invariant (see LaunchPacer).
+            dev = self._launch(jnp.asarray(buf[:, :w]))
+        except Exception as exc:                    # propagate to awaiters
+            # _buf deliberately NOT advanced: nothing holds this buffer (a
+            # failing launch must raise before dispatching work that reads
+            # the panel), and advancing without a pacer entry would
+            # desynchronize the buffer rotation from the pacing FIFO —
+            # the next rotation could then repack a buffer whose launch is
+            # still computing.
+            for _, fut, _ in chunk:
+                fut._fail(exc)
+            return None
+        record = _PanelRecord(dev)
+        pacer.commit(dev)
+        self._buf = (self._buf + 1) % len(self._staging)
+        for j, (_, fut, _) in enumerate(chunk):
+            fut._resolve(record, j)
+        return w
+
+    def precompile_width(self, w: int):
+        """Warm the launch callable on a zero ``(n, w)`` panel (blocking)."""
+        z = jnp.asarray(np.zeros((self.n, w), np.float32))
+        jax.block_until_ready(self._launch(z))
+
+
 class PanelRuntime:
     """Asynchronous micro-batching runtime over one panel launch callable.
 
@@ -182,21 +341,20 @@ class PanelRuntime:
         while the queue is at the cap.  ``None`` (default) = unbounded.
     max_inflight : int, optional
         Double-buffered launch depth: at most this many panels outstanding
-        on device.  Before taking new work the scheduler blocks on the
-        OLDEST outstanding panel, so one panel computes while the next
-        packs/uploads — and under overload the block lets pending requests
-        coalesce into WIDER panels (width adapts to load) instead of
-        flooding the device queue with narrow fixed-cost launches.
+        on device (see :class:`LaunchPacer`).
 
     Attributes
     ----------
     widths : tuple of int
         The pre-compilable panel width buckets (see
         :func:`panel_width_buckets`).
-    stats : dict
-        ``launched_widths`` (bounded deque, most recent panels),
-        ``panels_launched`` (running total), ``max_queue_depth``,
-        ``backpressure_waits``.
+    stats : _Stats
+        Dict-style counters — ``launched_widths`` (bounded deque, most
+        recent panels), ``panels_launched`` (running total),
+        ``max_queue_depth``, ``backpressure_waits`` — mutated under the
+        runtime lock.  CALL it (``runtime.stats()``) for a consistent
+        snapshot copied under that lock (deques become lists); indexing
+        the attribute directly keeps working but reads live state.
     """
 
     def __init__(self, n: int, max_batch: int, launch: Callable,
@@ -205,34 +363,29 @@ class PanelRuntime:
         if max_queue is not None and max_queue < max_batch:
             raise ValueError(f"max_queue ({max_queue}) must be >= "
                              f"max_batch ({max_batch})")
-        if max_inflight < 1:
-            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
-        self.n = int(n)
-        self.max_batch = int(max_batch)
-        self.widths = panel_width_buckets(max_batch, n_dev)
+        self._cv = threading.Condition()
+        self._pacer = LaunchPacer(max_inflight)
+        self._lane = PanelLane(n, max_batch, launch, n_dev=n_dev,
+                               slots=max_inflight)
+        self.n = self._lane.n
+        self.max_batch = self._lane.max_batch
+        self.widths = self._lane.widths
         self.deadline_s = deadline_s
         self.max_queue = max_queue
         self.max_inflight = max_inflight
         # launched_widths is bounded (always-on servers launch forever);
         # panels_launched is the running total
-        self.stats = {"launched_widths": deque(maxlen=1024),
-                      "panels_launched": 0, "max_queue_depth": 0,
-                      "backpressure_waits": 0}
-        self._inflight: list = []       # device results of outstanding panels
-        self._launch = launch
-        # one staging buffer per in-flight slot: the launch pacing in
-        # _scheduler guarantees a buffer's previous launch completed
-        # before the buffer comes around again for repacking
-        self._staging = [np.zeros((self.n, self.max_batch), np.float32)
-                         for _ in range(max_inflight)]
-        self._buf = 0
+        self.stats = _Stats(self._cv,
+                            {"launched_widths": deque(maxlen=1024),
+                             "panels_launched": 0, "max_queue_depth": 0,
+                             "backpressure_waits": 0})
         self._pending: list = []        # [(np vector, PanelFuture, t_arrival)]
-        self._cv = threading.Condition()
         self._flush_goal = 0            # launch until this many have launched
         self._launched = 0              # requests launched so far (FIFO count)
         self._submitted = 0
         self._in_launch = False
         self._closing = False
+        self._closed = False
         self._thread: threading.Thread | None = None
 
     # -- client side --------------------------------------------------------
@@ -241,20 +394,19 @@ class PanelRuntime:
         """Enqueue one request vector; returns its future immediately.
 
         Blocks only for backpressure (``max_queue``); never for the device.
+        Raises ``RuntimeError`` once the runtime has been closed.
         """
         q = np.asarray(vec, dtype=np.float32)
         if q.shape != (self.n,):
             raise ValueError(f"request shape {q.shape} != ({self.n},)")
         fut = PanelFuture()
         with self._cv:
-            if self._closing:
-                raise RuntimeError("runtime is closed")
+            self._check_open()
             while (self.max_queue is not None
                    and len(self._pending) >= self.max_queue):
                 self.stats["backpressure_waits"] += 1
                 self._cv.wait()
-                if self._closing:
-                    raise RuntimeError("runtime is closed")
+                self._check_open()
             self._pending.append((q, fut, time.monotonic()))
             self._submitted += 1
             depth = len(self._pending)
@@ -263,6 +415,13 @@ class PanelRuntime:
             self._ensure_thread()
             self._cv.notify_all()
         return fut
+
+    def _check_open(self):
+        if self._closing:
+            raise RuntimeError(
+                "PanelRuntime is closed — submit() rejected; results of "
+                "already-submitted requests remain fetchable via their "
+                "futures, but new work needs a new runtime")
 
     def flush(self):
         """Launch everything already submitted, partial panels included."""
@@ -285,17 +444,26 @@ class PanelRuntime:
         """Warm the launch callable on a zero panel per width bucket, so no
         real request pays the jit compile."""
         for w in self.widths:
-            z = jnp.asarray(np.zeros((self.n, w), np.float32))
-            jax.block_until_ready(self._launch(z))
+            self._lane.precompile_width(w)
 
     def queue_depth(self) -> int:
         with self._cv:
             return len(self._pending)
 
     def close(self):
-        """Drain pending requests, then stop the scheduler thread."""
+        """Drain pending requests, then stop the scheduler thread.
+
+        Idempotent: a second ``close()`` (or ``with``-exit after an
+        explicit close) returns immediately.
+        """
+        with self._cv:
+            if self._closed:
+                return
         self.drain()
         with self._cv:
+            if self._closed:            # lost a close/close race: done
+                return
+            self._closed = True
             self._closing = True
             self._cv.notify_all()
             thread = self._thread
@@ -323,19 +491,9 @@ class PanelRuntime:
 
     def _scheduler(self):
         while True:
-            # double-buffered launch pacing: block on the oldest in-flight
-            # panel BEFORE taking new work.  While blocked, arrivals keep
-            # queueing, so the next panel packs wider under load.
-            while len(self._inflight) >= self.max_inflight:
-                try:
-                    jax.block_until_ready(self._inflight.pop(0))
-                except Exception:
-                    # async dispatch defers device failures to the first
-                    # block: the panel's awaiters hit the same error at
-                    # their np.asarray fetch — do not let it kill the
-                    # scheduler thread (pending requests would strand and
-                    # close() would deadlock)
-                    pass
+            # launch pacing: block on the oldest in-flight panel BEFORE
+            # taking new work (see LaunchPacer).
+            self._pacer.wait_for_slot()
             with self._cv:
                 while True:
                     if self._closing:
@@ -357,41 +515,13 @@ class PanelRuntime:
                 self._launched += len(chunk)
                 self._in_launch = True
                 self._cv.notify_all()               # wake backpressured submits
+            w = None
             try:
-                self._launch_panel(chunk)
+                w = self._lane.launch_panel(chunk, self._pacer)
             finally:
                 with self._cv:
                     self._in_launch = False
+                    if w is not None:               # stats mutate under _cv
+                        self.stats["launched_widths"].append(w)
+                        self.stats["panels_launched"] += 1
                     self._cv.notify_all()           # wake drain()
-
-    def _launch_panel(self, chunk):
-        w = width_for(len(chunk), self.widths)
-        buf = self._staging[self._buf]
-        for j, (q, _, _) in enumerate(chunk):
-            buf[:, j] = q
-        if len(chunk) < w:
-            buf[:, len(chunk):w] = 0.0              # stale pad from last reuse
-        try:
-            # jnp.asarray on CPU can zero-copy ALIAS the staging buffer —
-            # safe ONLY because of the pacing invariant: this buffer's
-            # previous launch was block_until_ready'd before this repack
-            # (max_inflight slots, max_inflight buffers, strict FIFO), so
-            # no still-computing program is reading the memory we rewrote.
-            dev = self._launch(jnp.asarray(buf[:, :w]))
-        except Exception as exc:                    # propagate to awaiters
-            # _buf deliberately NOT advanced: nothing holds this buffer (a
-            # failing launch must raise before dispatching work that reads
-            # the panel), and advancing without an _inflight entry would
-            # desynchronize the buffer rotation from the pacing FIFO —
-            # the next rotation could then repack a buffer whose launch is
-            # still computing.
-            for _, fut, _ in chunk:
-                fut._fail(exc)
-            return
-        record = _PanelRecord(dev)
-        self._inflight.append(dev)                  # scheduler-thread only
-        self._buf = (self._buf + 1) % len(self._staging)
-        self.stats["launched_widths"].append(w)
-        self.stats["panels_launched"] += 1
-        for j, (_, fut, _) in enumerate(chunk):
-            fut._resolve(record, j)

@@ -66,10 +66,8 @@ def make_decode_step(cfg):
 
 def _mesh_n_dev(mesh) -> int:
     """Device count of a panel mesh (1 without a mesh)."""
-    if mesh is None:
-        return 1
-    from repro.parallel.mesh_ctx import mesh_axes, mesh_axes_size
-    return mesh_axes_size(mesh, mesh_axes(mesh))
+    from repro.parallel.hshard import mesh_device_count
+    return mesh_device_count(mesh)
 
 
 def _mesh_panel_width(max_batch: int, mesh) -> int:
@@ -94,9 +92,35 @@ class _PanelServerBase:
 
     def _init_runtime(self, n: int, max_batch: int, n_dev: int,
                       deadline_s, max_queue):
+        self.n_dev = n_dev
         self.runtime = PanelRuntime(n, max_batch, self._launch, n_dev=n_dev,
                                     deadline_s=deadline_s,
                                     max_queue=max_queue)
+
+    def tenant_spec(self, weight: float = 1.0,
+                    deadline_s: float | None = None,
+                    max_queue: int | None = None):
+        """This server's launch target as a multi-tenant registration.
+
+        Returns a ``repro.serve.tenancy.TenantSpec`` wrapping the SAME
+        compiled launch callable and width bucketing the server's own
+        runtime uses, so a tenant registered from it packs bit-identical
+        panels::
+
+            mtr.add_tenant("apply-eu", srv.tenant_spec(weight=2.0))
+
+        ``weight`` is the tenant's fair-share weight; ``deadline_s`` /
+        ``max_queue`` default to the server's own settings.
+        """
+        from repro.serve.tenancy import TenantSpec
+        if deadline_s is None:
+            deadline_s = self.runtime.deadline_s
+        if max_queue is None:
+            max_queue = self.runtime.max_queue
+        return TenantSpec(n=self.n, max_batch=self.max_batch,
+                          launch=self._launch, n_dev=self.n_dev,
+                          weight=weight, deadline_s=deadline_s,
+                          max_queue=max_queue)
 
     @property
     def widths(self) -> tuple:

@@ -1,0 +1,542 @@
+"""Multi-tenant serving: many H-matrices behind ONE panel scheduler.
+
+The paper's central pattern — batch many small H-matrix operations into few
+wide device launches — applies across *models*, not just across requests
+for one model: a service holding many kernel matrices (per-dataset,
+per-length-scale, per-region) must multiplex them onto one device without
+one tenant's traffic starving the rest.  The scheduling flavor follows the
+task-scheduling line of Börm/Christophersen/Kriemann's semi-automatic task
+graphs for H-arithmetic (PAPERS.md): the unit of scheduling is a whole
+batched panel launch, and fairness is enforced where the contention is —
+the device launch slots — rather than per request.
+
+:class:`MultiTenantRuntime` hosts N tenants (mixed apply- and solve-backed,
+each wrapping an ``HMatrix`` with its own ``n``, width buckets, and
+optional mesh) behind one scheduler thread and one global in-flight
+budget:
+
+* **Registry + per-tenant queues.**  :meth:`add_tenant` registers a
+  :class:`TenantSpec` (or anything with a ``tenant_spec()`` method — both
+  ``serve.step`` servers qualify) and returns a :class:`TenantHandle`
+  whose ``submit(vec)`` returns the same :class:`~repro.serve.runtime.
+  PanelFuture` machinery ``PanelRuntime`` uses (lazy shared per-panel
+  fetch, submission-order resolution).  Each tenant keeps its own FIFO
+  queue, deadline, backpressure cap, and stats.
+* **Weighted deficit-round-robin panel selection.**  Every launch slot is
+  one unit of cost; each scheduling round credits every *ready* tenant
+  with its ``weight`` and the scheduler serves the largest accumulated
+  deficit (ties to the least recently served).  A tenant with 10x the
+  traffic still gets only its weighted share of launch slots while others
+  are ready — and idle tenants bank no credit (their deficit resets), so
+  a burst after silence cannot monopolize the device either.
+* **One shared pacing FIFO.**  A single :class:`~repro.serve.runtime.
+  LaunchPacer` bounds TOTAL in-flight panels across all tenants
+  (``max_inflight``); each tenant's :class:`~repro.serve.runtime.
+  PanelLane` holds ``max_inflight`` staging buffers, which preserves the
+  staging-buffer aliasing guarantee ACROSS tenants (see ``LaunchPacer`` —
+  the proof only needs strict-FIFO retirement plus per-lane pools sized
+  to the budget).
+* **Shared compile cache.**  Warmed panel widths are tracked per
+  ``(tenant, width_bucket)``; :meth:`precompile` warms every registered
+  tenant's buckets and is incremental — adding a tenant later and calling
+  it again compiles only the new tenant's programs.
+* **Hot add/remove.**  :meth:`add_tenant` and :meth:`remove_tenant` work
+  mid-traffic; removal drains the tenant's queue (its futures all resolve)
+  without stalling the other tenants, then rejects further submits.
+
+Single-tenant behavior is unchanged: ``PanelRuntime`` shares the same
+lane/pacer core, and a tenant fed the same requests as a dedicated
+``PanelRuntime`` packs bit-identical panels (pinned by
+``tests/test_tenancy.py``).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, replace
+from typing import Callable
+
+from repro.serve.runtime import (LaunchPacer, PanelFuture, PanelLane, _Stats)
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """Everything the runtime needs to host one launch target.
+
+    Parameters
+    ----------
+    n : int
+        Request vector length (the tenant's H-matrix size).
+    max_batch : int
+        Full panel width for this tenant.  With ``n_dev > 1`` it must be
+        a multiple of ``n_dev`` (use :func:`apply_tenant` /
+        :func:`solve_tenant` or ``server.tenant_spec()`` to get the
+        rounding for free).
+    launch : Callable
+        ``launch(panel)``: ``(n, w) -> (n, w)`` device result, non-blocking
+        (same contract as :class:`repro.serve.runtime.PanelRuntime`).
+    n_dev : int, optional
+        Mesh device count; every width bucket is a multiple of it.
+    weight : float, optional
+        Fair-share weight (launch slots per scheduling round relative to
+        the other tenants).  Must be > 0.
+    deadline_s : float, optional
+        Flush this tenant's partial panel once its oldest request has
+        waited this long.
+    max_queue : int, optional
+        Per-tenant backpressure cap on queued-but-unlaunched requests.
+    """
+
+    n: int
+    max_batch: int
+    launch: Callable
+    n_dev: int = 1
+    weight: float = 1.0
+    deadline_s: float | None = None
+    max_queue: int | None = None
+
+    def __post_init__(self):
+        if self.weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {self.weight}")
+        if self.max_queue is not None and self.max_queue < self.max_batch:
+            raise ValueError(f"max_queue ({self.max_queue}) must be >= "
+                             f"max_batch ({self.max_batch})")
+
+
+def apply_tenant(hm, max_batch: int = 64, use_pallas: bool = False,
+                 mesh=None, **spec_kw) -> TenantSpec:
+    """Spec for an apply-backed tenant (``Z = H @ X`` query traffic).
+
+    Builds the batched executor via ``core.hmatrix.make_apply`` (sharded
+    over ``mesh`` when given) and rounds ``max_batch`` up to the mesh
+    device count via ``hshard.pad_panel_width``.
+    """
+    from repro.core.hmatrix import make_apply
+    from repro.parallel.hshard import mesh_device_count, pad_panel_width
+    n_dev = mesh_device_count(mesh)
+    return TenantSpec(n=hm.shape[0],
+                      max_batch=pad_panel_width(max_batch, n_dev),
+                      launch=make_apply(hm, use_pallas=use_pallas, mesh=mesh),
+                      n_dev=n_dev, **spec_kw)
+
+
+def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
+                 max_iter: int = 300, precondition: bool = True,
+                 use_pallas: bool = False, mesh=None,
+                 info_log: deque | None = None, **spec_kw) -> TenantSpec:
+    """Spec for a solve-backed tenant (regression-fit traffic).
+
+    One fused PCG ``while_loop`` launch per panel (``solve.make_solver``).
+    Pass ``info_log`` (a bounded ``deque``) to retain the per-panel LAZY
+    ``SolveInfo`` records; by default they are dropped unread (costs no
+    device sync either way).
+    """
+    from repro.parallel.hshard import mesh_device_count, pad_panel_width
+    from repro.solve import make_solver
+    n_dev = mesh_device_count(mesh)
+    solve = make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
+                        precondition=precondition, use_pallas=use_pallas,
+                        mesh=mesh)
+
+    def launch(panel):
+        c, info = solve(panel)
+        if info_log is not None:
+            info_log.append(info)                   # lazy: no device sync
+        return c
+
+    return TenantSpec(n=hm.shape[0],
+                      max_batch=pad_panel_width(max_batch, n_dev),
+                      launch=launch, n_dev=n_dev, **spec_kw)
+
+
+class _Tenant:
+    """Scheduler-internal per-tenant state (guarded by the runtime lock)."""
+
+    __slots__ = ("name", "spec", "lane", "pending", "submitted", "launched",
+                 "flush_goal", "in_launch", "weight", "deficit",
+                 "last_served", "removing", "stats")
+
+    def __init__(self, name: str, spec: TenantSpec, slots: int, lock):
+        self.name = name
+        self.spec = spec
+        self.lane = PanelLane(spec.n, spec.max_batch, spec.launch,
+                              n_dev=spec.n_dev, slots=slots)
+        self.pending: list = []         # [(np vector, PanelFuture, t_arrival)]
+        self.submitted = 0
+        self.launched = 0
+        self.flush_goal = 0
+        self.in_launch = False
+        self.weight = float(spec.weight)
+        self.deficit = 0.0              # banked launch-slot credit (DRR)
+        self.last_served = 0            # global launch seq, for tie-breaks
+        self.removing = False
+        self.stats = _Stats(lock, {"launched_widths": deque(maxlen=1024),
+                                   "panels_launched": 0, "submitted": 0,
+                                   "max_queue_depth": 0,
+                                   "backpressure_waits": 0,
+                                   "deadline_flushes": 0})
+
+    def drained(self) -> bool:
+        return not self.pending and not self.in_launch
+
+
+class TenantHandle:
+    """Client-side view of one registered tenant.
+
+    Mirrors the single-tenant ``PanelRuntime`` surface — ``submit`` /
+    ``flush`` / ``drain`` / ``queue_depth`` / ``widths`` / ``stats`` — but
+    scoped to this tenant inside the shared runtime.  ``stats`` is the
+    same callable-dict as ``PanelRuntime.stats``: index it for live
+    counters, CALL it for a locked snapshot.  The handle stays readable
+    after :meth:`MultiTenantRuntime.remove_tenant`; only ``submit`` is
+    rejected then.
+    """
+
+    def __init__(self, runtime: "MultiTenantRuntime", tenant: _Tenant):
+        self._runtime = runtime
+        self._tenant = tenant
+
+    @property
+    def name(self) -> str:
+        return self._tenant.name
+
+    @property
+    def widths(self) -> tuple:
+        return self._tenant.lane.widths
+
+    @property
+    def weight(self) -> float:
+        return self._tenant.weight
+
+    @property
+    def stats(self) -> _Stats:
+        return self._tenant.stats
+
+    def submit(self, vec) -> PanelFuture:
+        return self._runtime._submit(self._tenant, vec)
+
+    def flush(self):
+        # operates on the tenant object, not the registry name: after
+        # remove_tenant this is a harmless no-op (the queue was drained),
+        # keeping the only-submit-is-rejected contract
+        rt = self._runtime
+        with rt._cv:
+            self._tenant.flush_goal = max(self._tenant.flush_goal,
+                                          self._tenant.submitted)
+            rt._cv.notify_all()
+
+    def drain(self):
+        self.flush()
+        rt = self._runtime
+        with rt._cv:
+            rt._cv.wait_for(lambda: self._tenant.drained() or rt._closing)
+
+    def queue_depth(self) -> int:
+        with self._runtime._cv:
+            return len(self._tenant.pending)
+
+    def set_weight(self, weight: float):
+        """Adjust this tenant's fair-share weight on the fly."""
+        if weight <= 0:
+            raise ValueError(f"tenant weight must be > 0, got {weight}")
+        with self._runtime._cv:
+            self._tenant.weight = float(weight)
+
+
+class MultiTenantRuntime:
+    """One scheduler thread + one in-flight budget hosting many tenants.
+
+    Parameters
+    ----------
+    max_inflight : int, optional
+        GLOBAL double-buffered launch depth: at most this many panels
+        outstanding on device across ALL tenants (one shared
+        :class:`~repro.serve.runtime.LaunchPacer`).  Every tenant's
+        staging pool is sized to it, which is what carries the
+        staging-buffer aliasing guarantee across tenants.
+
+    Attributes
+    ----------
+    stats : _Stats
+        Global counters — ``panels_launched``, ``launch_order`` (bounded
+        deque of tenant names in launch order; the fairness trace),
+        ``tenants_added`` / ``tenants_removed``.  Call ``stats()`` for a
+        locked snapshot; per-tenant counters live on each handle.
+    """
+
+    def __init__(self, max_inflight: int = 2):
+        self._cv = threading.Condition()
+        self._pacer = LaunchPacer(max_inflight)
+        self.max_inflight = int(max_inflight)
+        self._tenants: dict[str, _Tenant] = {}
+        self._compiled: set = set()     # warmed (tenant name, width) pairs
+        self._launch_seq = 0
+        self.stats = _Stats(self._cv,
+                            {"panels_launched": 0,
+                             "launch_order": deque(maxlen=2048),
+                             "tenants_added": 0, "tenants_removed": 0})
+        self._closing = False
+        self._closed = False
+        self._thread: threading.Thread | None = None
+
+    # -- registry -----------------------------------------------------------
+
+    def add_tenant(self, name: str, spec, **overrides) -> TenantHandle:
+        """Register a tenant under ``name`` and return its handle.
+
+        ``spec`` is a :class:`TenantSpec`, or any object with a
+        ``tenant_spec()`` method (both ``serve.step`` servers).  Keyword
+        ``overrides`` replace spec fields (e.g. ``weight=2.0,
+        deadline_s=0.01``).  Hot: works while the scheduler is serving
+        other tenants.
+        """
+        if hasattr(spec, "tenant_spec"):
+            spec = spec.tenant_spec()
+        if not isinstance(spec, TenantSpec):
+            raise TypeError(f"spec must be a TenantSpec or have a "
+                            f"tenant_spec() method, got {type(spec)!r}")
+        if overrides:
+            spec = replace(spec, **overrides)
+        with self._cv:
+            self._check_open()
+            if name in self._tenants:
+                raise ValueError(f"tenant {name!r} already registered")
+            tenant = _Tenant(name, spec, self.max_inflight, self._cv)
+            self._tenants[name] = tenant
+            self.stats["tenants_added"] += 1
+            self._cv.notify_all()
+            return TenantHandle(self, tenant)
+
+    def remove_tenant(self, name: str):
+        """Drain ``name``'s queue, then deregister it.
+
+        Every already-submitted request still launches and its future
+        resolves; OTHER tenants keep being served throughout (this call
+        waits on the shared condition, not the scheduler).  Subsequent
+        ``submit`` calls on the tenant's handle raise.
+        """
+        with self._cv:
+            tenant = self._tenants.get(name)
+            if tenant is None:
+                raise KeyError(f"no tenant named {name!r}")
+            tenant.removing = True
+            tenant.flush_goal = tenant.submitted    # drain = flush everything
+            self._ensure_thread_locked()
+            self._cv.notify_all()
+            self._cv.wait_for(lambda: tenant.drained() or self._closing)
+            self._tenants.pop(name, None)
+            self._compiled = {kw for kw in self._compiled if kw[0] != name}
+            self.stats["tenants_removed"] += 1
+            self._cv.notify_all()                   # wake backpressured submits
+
+    def tenants(self) -> tuple:
+        with self._cv:
+            return tuple(self._tenants)
+
+    # -- client side --------------------------------------------------------
+
+    def _submit(self, tenant: _Tenant, vec) -> PanelFuture:
+        q = np.asarray(vec, dtype=np.float32)
+        if q.shape != (tenant.lane.n,):
+            raise ValueError(f"request shape {q.shape} != ({tenant.lane.n},) "
+                             f"for tenant {tenant.name!r}")
+        fut = PanelFuture()
+        with self._cv:
+            self._check_submittable(tenant)
+            cap = tenant.spec.max_queue
+            while cap is not None and len(tenant.pending) >= cap:
+                tenant.stats["backpressure_waits"] += 1
+                self._cv.wait()
+                self._check_submittable(tenant)
+            tenant.pending.append((q, fut, time.monotonic()))
+            tenant.submitted += 1
+            tenant.stats["submitted"] += 1
+            depth = len(tenant.pending)
+            if depth > tenant.stats["max_queue_depth"]:
+                tenant.stats["max_queue_depth"] = depth
+            self._ensure_thread_locked()
+            self._cv.notify_all()
+        return fut
+
+    def _check_open(self):
+        if self._closing:
+            raise RuntimeError(
+                "MultiTenantRuntime is closed — submit()/add_tenant() "
+                "rejected; already-submitted futures remain fetchable")
+
+    def _check_submittable(self, tenant: _Tenant):
+        self._check_open()
+        if tenant.removing:
+            raise RuntimeError(f"tenant {tenant.name!r} has been removed "
+                               f"from the runtime — submit() rejected")
+
+    def flush(self, name: str | None = None):
+        """Launch everything already submitted (one tenant, or all)."""
+        with self._cv:
+            for tenant in self._select(name):
+                tenant.flush_goal = max(tenant.flush_goal, tenant.submitted)
+            self._cv.notify_all()
+
+    def drain(self, name: str | None = None):
+        """Flush, then block until every selected request has LAUNCHED."""
+        self.flush(name)
+        with self._cv:
+            tenants = self._select(name)
+            self._cv.wait_for(
+                lambda: all(t.drained() for t in tenants) or self._closing)
+
+    def _select(self, name: str | None) -> list:
+        if name is None:
+            return list(self._tenants.values())
+        if name not in self._tenants:
+            raise KeyError(f"no tenant named {name!r}")
+        return [self._tenants[name]]
+
+    def precompile(self):
+        """Warm every tenant's width buckets (shared compile cache).
+
+        Incremental: ``(tenant, width)`` pairs already warmed — by a prior
+        ``precompile`` or by real launches — are skipped, so calling this
+        after :meth:`add_tenant` compiles only the new tenant's programs.
+        """
+        with self._cv:
+            todo = [(t.name, t.lane, w) for t in self._tenants.values()
+                    for w in t.lane.widths
+                    if (t.name, w) not in self._compiled]
+        for name, lane, w in todo:      # blocking compiles OUTSIDE the lock
+            lane.precompile_width(w)
+            with self._cv:
+                current = self._tenants.get(name)
+                if current is not None and current.lane is lane:
+                    # guard against remove_tenant + re-add of the same name
+                    # mid-precompile: a stale key would make the NEW
+                    # tenant's buckets look warm when they are not
+                    self._compiled.add((name, w))
+
+    def tenant_stats(self) -> dict:
+        """Locked snapshot of every tenant's counters, keyed by name."""
+        with self._cv:
+            tenants = list(self._tenants.items())
+        return {name: tenant.stats() for name, tenant in tenants}
+
+    def close(self):
+        """Drain every tenant, then stop the scheduler thread (idempotent)."""
+        with self._cv:
+            if self._closed:
+                return
+        self.drain()
+        with self._cv:
+            if self._closed:
+                return
+            self._closed = True
+            self._closing = True
+            self._cv.notify_all()
+            thread = self._thread
+        if thread is not None:
+            thread.join(timeout=10)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- scheduler side -----------------------------------------------------
+
+    def _ensure_thread_locked(self):
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._scheduler, name="tenant-runtime", daemon=True)
+            self._thread.start()
+
+    def _ready(self, tenant: _Tenant, now: float) -> bool:
+        """Does this tenant have a launchable panel right now?"""
+        if not tenant.pending:
+            tenant.deficit = 0.0        # classic DRR: idle banks no credit
+            return False
+        if len(tenant.pending) >= tenant.lane.max_batch:
+            return True                 # full panel
+        if tenant.launched < tenant.flush_goal:
+            return True                 # flushed / draining partial panel
+        dl = tenant.spec.deadline_s
+        return dl is not None and tenant.pending[0][2] + dl <= now
+
+    def _next_deadline(self) -> float | None:
+        """Earliest pending deadline across tenants (None if no deadlines)."""
+        deadlines = [t.pending[0][2] + t.spec.deadline_s
+                     for t in self._tenants.values()
+                     if t.pending and t.spec.deadline_s is not None]
+        return min(deadlines) if deadlines else None
+
+    def _pick(self, ready: list) -> _Tenant:
+        """Weighted deficit round robin over the ready tenants.
+
+        Each round credits every ready tenant with its weight; the launch
+        slot goes to the largest banked deficit (ties to the least
+        recently served), which then pays 1 slot of cost.  Over any
+        contended interval, tenant launch counts converge to the weight
+        ratio no matter how skewed the per-tenant loads are.
+        """
+        while True:
+            eligible = [t for t in ready if t.deficit >= 1.0]
+            if eligible:
+                tenant = max(eligible,
+                             key=lambda t: (t.deficit, -t.last_served))
+                tenant.deficit -= 1.0
+                return tenant
+            for t in ready:             # one credit round (weights > 0, so
+                t.deficit += t.weight   # some tenant reaches 1.0 eventually)
+        # unreachable
+
+    def _scheduler(self):
+        while True:
+            # global pacing: block on the oldest in-flight panel across ALL
+            # tenants before taking new work — while blocked, every queue
+            # keeps coalescing into wider panels (see LaunchPacer).
+            self._pacer.wait_for_slot()
+            with self._cv:
+                tenant = None
+                while tenant is None:
+                    if self._closing:
+                        return
+                    now = time.monotonic()
+                    ready = [t for t in self._tenants.values()
+                             if self._ready(t, now)]
+                    if ready:
+                        tenant = self._pick(ready)
+                        break
+                    deadline = self._next_deadline()
+                    if deadline is not None:
+                        wait = deadline - time.monotonic()
+                        if wait > 0:
+                            self._cv.wait(wait)
+                    else:
+                        self._cv.wait()
+                is_deadline_flush = (
+                    len(tenant.pending) < tenant.lane.max_batch
+                    and tenant.launched >= tenant.flush_goal)
+                chunk = tenant.pending[:tenant.lane.max_batch]
+                del tenant.pending[:len(chunk)]
+                tenant.launched += len(chunk)
+                tenant.in_launch = True
+                self._launch_seq += 1
+                tenant.last_served = self._launch_seq
+                self._cv.notify_all()               # wake backpressured submits
+            w = None
+            try:
+                w = tenant.lane.launch_panel(chunk, self._pacer)
+            finally:
+                with self._cv:
+                    tenant.in_launch = False
+                    if w is not None:               # stats mutate under _cv
+                        tenant.stats["launched_widths"].append(w)
+                        tenant.stats["panels_launched"] += 1
+                        if is_deadline_flush:
+                            tenant.stats["deadline_flushes"] += 1
+                        self.stats["panels_launched"] += 1
+                        self.stats["launch_order"].append(tenant.name)
+                        self._compiled.add((tenant.name, w))
+                    self._cv.notify_all()           # wake drain()/remove

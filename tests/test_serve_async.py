@@ -205,6 +205,37 @@ def test_submit_validates_and_close_rejects():
         rt.submit(np.ones(32, np.float32))
 
 
+def test_close_is_idempotent():
+    """Second close() — and context-exit after an explicit close — is a
+    no-op, not a hang or error; results stay fetchable."""
+    rt = _echo_runtime()
+    f = rt.submit(np.ones(32, np.float32))
+    with rt:                            # __exit__ will close a closed runtime
+        rt.close()
+        rt.close()
+    rt.close()
+    np.testing.assert_array_equal(f.result(timeout=10),
+                                  np.full(32, 2.0, np.float32))
+    with pytest.raises(RuntimeError, match="closed"):
+        rt.submit(np.ones(32, np.float32))
+
+
+def test_stats_snapshot_copies_under_lock():
+    """stats() returns a consistent copy (deques become lists, mutations
+    don't leak back); the legacy dict-style attribute keeps working."""
+    with _echo_runtime() as rt:
+        futs = [rt.submit(np.ones(32, np.float32)) for _ in range(9)]
+        rt.flush()
+        [f.result(timeout=30) for f in futs]
+        snap = rt.stats()
+        assert snap["panels_launched"] == 2          # 8 + bucketed tail
+        assert isinstance(snap["launched_widths"], list)
+        snap["launched_widths"].append(999)
+        snap["panels_launched"] = -1
+        assert 999 not in rt.stats["launched_widths"]  # live stats untouched
+        assert rt.stats["panels_launched"] == 2        # legacy access works
+
+
 def test_launch_error_propagates_to_futures():
     def broken_launch(panel):
         raise RuntimeError("device on fire")

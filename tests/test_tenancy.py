@@ -1,0 +1,571 @@
+"""Multi-tenant serving runtime (`repro.serve.tenancy`): per-tenant results
+bit-identical to a dedicated single-tenant `PanelRuntime` (even + ragged +
+meshed), weighted fair-share scheduling under skewed load (no starvation),
+hot add/remove mid-traffic, per-tenant backpressure/deadlines/stats, and
+the shared compile cache.
+
+Mesh tests run the same two ways as tests/test_shard.py: directly under
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (the CI tenancy
+job), or via the ``slow``-marked subprocess self-runner at the bottom so
+the plain tier-1 suite covers them on one-device machines.
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import build_hmatrix, halton
+from repro.serve.runtime import PanelRuntime
+from repro.serve.step import HMatrixServer, HMatrixSolveServer
+from repro.serve.tenancy import (MultiTenantRuntime, TenantSpec, apply_tenant,
+                                 solve_tenant)
+
+N_DEV = 4
+requires_mesh = pytest.mark.skipif(
+    jax.device_count() < N_DEV,
+    reason=f"needs >= {N_DEV} devices "
+           f"(XLA_FLAGS=--xla_force_host_platform_device_count={N_DEV})")
+
+SIGMA2 = 0.5
+
+
+def _system(n, r, seed=0):
+    # local rng (see test_serve_async._system for why not the session rng)
+    rng = np.random.RandomState(seed)
+    pts = halton(n, 2)
+    F = rng.randn(n, r).astype(np.float32)
+    hm = build_hmatrix(pts, "gaussian", k=16, c_leaf=128, precompute=True)
+    return hm, F
+
+
+def _echo(scale):
+    return lambda panel: panel * scale
+
+
+def _echo_spec(n=16, max_batch=4, scale=2.0, **kw):
+    return TenantSpec(n=n, max_batch=max_batch, launch=_echo(scale), **kw)
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: a tenant == a dedicated PanelRuntime on the same requests
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_requests", [8, 11])  # even: full panels; ragged
+def test_tenant_matches_dedicated_runtime_bit_identical(n_requests):
+    """The same requests through a MultiTenantRuntime tenant and through a
+    dedicated PanelRuntime pack the same width-bucketed panels and return
+    BIT-identical results — single-tenant behavior survives the refactor."""
+    hm, F = _system(600, 11)
+    with HMatrixServer(hm, max_batch=4) as srv:
+        queries = [F[:, j] for j in range(n_requests)]
+        dedicated = [f.result(timeout=120)
+                     for f in srv.serve_async(queries)]
+        with MultiTenantRuntime() as mtr:
+            tenant = mtr.add_tenant("apply", srv)    # server registers itself
+            futures = [tenant.submit(q) for q in queries]
+            tenant.flush()
+            outs = [f.result(timeout=120) for f in futures]
+    for j in range(n_requests):
+        np.testing.assert_array_equal(outs[j], dedicated[j])
+    # identical panel boundaries -> identical width sequence
+    assert list(tenant.stats["launched_widths"]) == \
+        list(srv.runtime.stats["launched_widths"])
+
+
+def test_mixed_apply_and_solve_tenants_match_single_tenant():
+    """Two tenants with DIFFERENT n, one apply-backed and one solve-backed
+    (via the spec helpers), interleaved under one scheduler: each tenant's
+    results are bit-identical to its own dedicated runtime."""
+    hm_a, F_a = _system(600, 6, seed=1)
+    hm_s, F_s = _system(512, 5, seed=2)
+    info_log = deque(maxlen=8)
+    with MultiTenantRuntime() as mtr:
+        ta = mtr.add_tenant("apply", apply_tenant(hm_a, max_batch=4))
+        ts = mtr.add_tenant("solve", solve_tenant(
+            hm_s, SIGMA2, max_batch=2, tol=1e-6, max_iter=400,
+            info_log=info_log))
+        fa = [ta.submit(F_a[:, j]) for j in range(6)]
+        fs = [ts.submit(F_s[:, j]) for j in range(5)]
+        mtr.flush()
+        outs_a = [f.result(timeout=120) for f in fa]
+        outs_s = [f.result(timeout=240) for f in fs]
+    with HMatrixServer(hm_a, max_batch=4) as srv:
+        ded_a = srv.serve([F_a[:, j] for j in range(6)])
+    with HMatrixSolveServer(hm_s, SIGMA2, max_batch=2, tol=1e-6,
+                            max_iter=400) as ssrv:
+        ded_s = ssrv.serve([F_s[:, j] for j in range(5)])
+    for j in range(6):
+        np.testing.assert_array_equal(outs_a[j], ded_a[j])
+    for j in range(5):
+        np.testing.assert_array_equal(outs_s[j], ded_s[j])
+    assert len(info_log) == 3                       # 2+2+1 solve panels
+    assert all(info.converged for info in info_log)
+
+
+# ---------------------------------------------------------------------------
+# fair-share scheduling: skewed load, weights, no starvation
+# ---------------------------------------------------------------------------
+
+
+def _interleave_gaps(order, name):
+    """Number of foreign launches between consecutive ``name`` launches."""
+    idx = [i for i, t in enumerate(order) if t == name]
+    assert idx, f"{name} never launched: {order}"
+    return [b - a - 1 for a, b in zip(idx, idx[1:])]
+
+
+def test_skewed_load_light_tenant_not_starved():
+    """10:1 skewed load, equal weights, one shared in-flight budget: the
+    light tenant's panels interleave ~1:1 with the heavy tenant's (deficit
+    round robin grants it every other contended slot), so its p95 latency
+    is bounded by a few panel times — not by the heavy backlog."""
+    def slow_launch(panel):
+        time.sleep(0.005)               # fixed panel cost: fairness visible
+        return panel * 2.0
+
+    with MultiTenantRuntime(max_inflight=2) as mtr:
+        heavy = mtr.add_tenant("heavy", TenantSpec(16, 4, slow_launch))
+        light = mtr.add_tenant("light", TenantSpec(16, 4, slow_launch))
+        hf = [heavy.submit(np.full(16, j, np.float32)) for j in range(160)]
+        mtr.flush()                     # heavy backlog: 40 panels queued
+        # light trickle: 4 full panels, submitted while heavy is backlogged
+        lf = [light.submit(np.full(16, 100 + j, np.float32))
+              for j in range(16)]
+        for j, f in enumerate(lf):
+            np.testing.assert_array_equal(f.result(timeout=60),
+                                          np.full(16, 2.0 * (100 + j)))
+        # the light tenant finished while the heavy backlog was still being
+        # served — it did not wait behind the whole 40-panel queue
+        heavy_backlog_live = not hf[-1].done()
+        [f.result(timeout=60) for f in hf]
+        order = list(mtr.stats["launch_order"])
+        assert heavy_backlog_live, "light tenant waited out the heavy backlog"
+    # every light panel launched; between consecutive light launches the
+    # heavy tenant got a bounded number of slots, not the whole backlog
+    assert order.count("light") == 4 and order.count("heavy") == 40
+    gaps = _interleave_gaps(order, "light")
+    assert max(gaps) <= 3, f"light tenant starved: {order}"
+    # all light futures resolved long before the heavy backlog finished
+    assert all(f.done() for f in lf)
+
+
+def test_weighted_shares_follow_weights():
+    """Two always-ready tenants at weights 3:1 split contended launch slots
+    ~3:1 (deficit round robin in launch-slot units)."""
+    def slow_launch(panel):
+        time.sleep(0.002)
+        return panel
+
+    with MultiTenantRuntime(max_inflight=1) as mtr:
+        a = mtr.add_tenant("a", TenantSpec(8, 2, slow_launch, weight=3.0))
+        b = mtr.add_tenant("b", TenantSpec(8, 2, slow_launch, weight=1.0))
+        fa = [a.submit(np.zeros(8, np.float32)) for _ in range(80)]
+        fb = [b.submit(np.zeros(8, np.float32)) for _ in range(80)]
+        mtr.flush()
+        mtr.drain()
+        order = list(mtr.stats["launch_order"])
+        [f.result(timeout=60) for f in fa + fb]
+    # while BOTH are backlogged (the first ~2*min(counts) contended slots),
+    # shares track the 3:1 weights; afterwards the survivor takes the rest
+    contended = order[:40]
+    n_a = contended.count("a")
+    assert 25 <= n_a <= 35, f"weight 3:1 not honored: {n_a}/40 in {contended}"
+
+
+def test_idle_tenant_banks_no_credit():
+    """A tenant that was idle while another served does NOT accumulate
+    deficit credit: when it wakes, it gets its fair share, not a monopoly
+    (classic DRR resets the deficit of empty queues)."""
+    def slow_launch(panel):
+        time.sleep(0.002)
+        return panel
+
+    with MultiTenantRuntime(max_inflight=1) as mtr:
+        a = mtr.add_tenant("a", TenantSpec(8, 2, slow_launch))
+        b = mtr.add_tenant("b", TenantSpec(8, 2, slow_launch))
+        # phase 1: only a serves (b idle, would have banked credit)
+        fa = [a.submit(np.zeros(8, np.float32)) for _ in range(40)]
+        mtr.flush()
+        mtr.drain()
+        # phase 2: both flood; b must NOT get a long monopoly run
+        fa += [a.submit(np.zeros(8, np.float32)) for _ in range(40)]
+        fb = [b.submit(np.zeros(8, np.float32)) for _ in range(40)]
+        mtr.flush()
+        mtr.drain()
+        order = list(mtr.stats["launch_order"])
+        [f.result(timeout=60) for f in fa + fb]
+    phase2 = order[20:]                 # after a's first 20 solo panels
+    gaps = _interleave_gaps(phase2, "a")
+    assert max(gaps) <= 3, f"b monopolized after idling: {phase2}"
+
+
+# ---------------------------------------------------------------------------
+# hot add / remove
+# ---------------------------------------------------------------------------
+
+
+def test_remove_tenant_mid_traffic_drains_cleanly():
+    """remove_tenant while BOTH tenants have queued work: the removed
+    tenant's futures all resolve correctly, the surviving tenant keeps
+    serving (before, during, and after), and later submits to the removed
+    handle raise."""
+    def slow_launch(panel):
+        time.sleep(0.003)
+        return panel * 2.0
+
+    with MultiTenantRuntime() as mtr:
+        keep = mtr.add_tenant("keep", TenantSpec(16, 4, slow_launch))
+        gone = mtr.add_tenant("gone", TenantSpec(16, 4, slow_launch))
+        kf = [keep.submit(np.full(16, j, np.float32)) for j in range(40)]
+        gf = [gone.submit(np.full(16, j, np.float32)) for j in range(12)]
+        mtr.flush()
+        mtr.remove_tenant("gone")       # mid-traffic: keep's backlog live
+        assert mtr.tenants() == ("keep",)
+        for j, f in enumerate(gf):      # every pre-removal request resolved
+            np.testing.assert_array_equal(f.result(timeout=60),
+                                          np.full(16, 2.0 * j))
+        with pytest.raises(RuntimeError, match="removed"):
+            gone.submit(np.zeros(16, np.float32))
+        gone.flush()                    # handle stays usable read-only:
+        gone.drain()                    # no-ops, not KeyError
+        # the survivor still serves new traffic after the removal
+        kf.append(keep.submit(np.full(16, 99.0, np.float32)))
+        mtr.flush()
+        for j, f in enumerate(kf[:40]):
+            np.testing.assert_array_equal(f.result(timeout=60),
+                                          np.full(16, 2.0 * j))
+        np.testing.assert_array_equal(kf[40].result(timeout=60),
+                                      np.full(16, 198.0))
+        assert mtr.stats["tenants_removed"] == 1
+    with pytest.raises(KeyError):
+        mtr.remove_tenant("gone")
+
+
+def test_add_tenant_while_serving_and_registry_validation():
+    with MultiTenantRuntime() as mtr:
+        a = mtr.add_tenant("a", _echo_spec())
+        fa = [a.submit(np.ones(16, np.float32)) for _ in range(6)]
+        b = mtr.add_tenant("b", _echo_spec(n=8, scale=3.0))  # hot add
+        fb = b.submit(np.ones(8, np.float32))
+        mtr.flush()
+        np.testing.assert_array_equal(fb.result(timeout=30),
+                                      np.full(8, 3.0))
+        [f.result(timeout=30) for f in fa]
+        with pytest.raises(ValueError, match="already registered"):
+            mtr.add_tenant("a", _echo_spec())
+        with pytest.raises(TypeError):
+            mtr.add_tenant("c", object())
+        with pytest.raises(ValueError, match="weight"):
+            mtr.add_tenant("c", _echo_spec(weight=0.0))
+
+
+# ---------------------------------------------------------------------------
+# per-tenant deadlines, backpressure, stats; global budget; close
+# ---------------------------------------------------------------------------
+
+
+def test_per_tenant_deadline_flush():
+    """Only the tenant WITH a deadline flushes its partial panel; the other
+    tenant's partial panel stays queued until an explicit flush."""
+    with MultiTenantRuntime() as mtr:
+        fast = mtr.add_tenant("fast", _echo_spec(deadline_s=0.05))
+        slow = mtr.add_tenant("slow", _echo_spec())
+        f1 = fast.submit(np.ones(16, np.float32))
+        f2 = slow.submit(np.ones(16, np.float32))
+        np.testing.assert_array_equal(f1.result(timeout=30),
+                                      np.full(16, 2.0))
+        assert fast.stats["deadline_flushes"] == 1
+        assert not f2.done() and slow.queue_depth() == 1
+        slow.flush()
+        f2.result(timeout=30)
+    assert slow.stats["deadline_flushes"] == 0
+
+
+def test_per_tenant_backpressure_isolated():
+    """One tenant's max_queue cap blocks ITS producer at the cap while the
+    other tenant keeps an unbounded queue; every request still completes."""
+    def slow_launch(panel):
+        time.sleep(0.02)
+        return panel * 2.0
+
+    with MultiTenantRuntime() as mtr:
+        capped = mtr.add_tenant("capped",
+                                TenantSpec(16, 2, slow_launch, max_queue=4))
+        free = mtr.add_tenant("free", _echo_spec())
+        futures = []
+
+        def producer():
+            for j in range(16):
+                futures.append(capped.submit(np.full(16, j, np.float32)))
+
+        t = threading.Thread(target=producer)
+        t.start()
+        ff = [free.submit(np.zeros(16, np.float32)) for _ in range(100)]
+        t.join(timeout=60)
+        assert not t.is_alive()
+        mtr.flush()
+        for j, f in enumerate(futures):
+            np.testing.assert_array_equal(f.result(timeout=60),
+                                          np.full(16, 2.0 * j))
+        [f.result(timeout=30) for f in ff]
+        snap = capped.stats()
+        assert snap["max_queue_depth"] <= 4
+        assert snap["backpressure_waits"] > 0
+        assert free.stats()["backpressure_waits"] == 0
+    with pytest.raises(ValueError, match="max_queue"):
+        TenantSpec(16, 8, _echo(2.0), max_queue=4)
+
+
+def test_launch_pacer_fifo_budget():
+    """The shared LaunchPacer retires launches in strict FIFO order and
+    never lets more than ``max_inflight`` stay outstanding — the invariant
+    the cross-tenant staging-buffer aliasing guarantee rests on."""
+    from repro.serve.runtime import LaunchPacer
+
+    class FakeDev:
+        def __init__(self):
+            self.blocked = False
+
+        def block_until_ready(self):
+            self.blocked = True
+            return self
+
+    pacer = LaunchPacer(max_inflight=2)
+    a, b, c = FakeDev(), FakeDev(), FakeDev()
+    pacer.wait_for_slot()
+    pacer.commit(a)
+    pacer.wait_for_slot()               # one slot still free: no retirement
+    pacer.commit(b)
+    assert not a.blocked and not b.blocked and len(pacer) == 2
+    pacer.wait_for_slot()               # budget full: retires the OLDEST
+    assert a.blocked and not b.blocked and len(pacer) == 1
+    pacer.commit(c)
+    pacer.wait_for_slot()
+    assert b.blocked and not c.blocked  # still FIFO, across commits
+    with pytest.raises(ValueError):
+        LaunchPacer(max_inflight=0)
+
+
+def test_stats_snapshots_and_close_semantics():
+    """Per-tenant and global stats() snapshots are consistent copies;
+    close() is idempotent; submit()/add_tenant() after close raise with a
+    clear message."""
+    mtr = MultiTenantRuntime()
+    a = mtr.add_tenant("a", _echo_spec())
+    futs = [a.submit(np.ones(16, np.float32)) for _ in range(9)]
+    mtr.flush()
+    [f.result(timeout=30) for f in futs]
+    snap = a.stats()
+    assert snap["submitted"] == 9 and snap["panels_launched"] == 3
+    assert isinstance(snap["launched_widths"], list)  # deque copied to list
+    snap["launched_widths"].append(999)               # mutating the copy...
+    assert 999 not in a.stats["launched_widths"]      # ...not the live stats
+    g = mtr.stats()
+    assert g["panels_launched"] == 3
+    assert mtr.tenant_stats()["a"]["panels_launched"] == 3
+    mtr.close()
+    mtr.close()                                       # idempotent: no-op
+    with mtr:                                         # __exit__ after close
+        pass
+    with pytest.raises(RuntimeError, match="closed"):
+        a.submit(np.ones(16, np.float32))
+    with pytest.raises(RuntimeError, match="closed"):
+        mtr.add_tenant("b", _echo_spec())
+    assert futs[0].result(timeout=5) is not None      # results survive close
+
+
+def test_precompile_is_incremental_per_tenant():
+    """precompile() warms every (tenant, width) pair once; a tenant added
+    later recompiles ONLY its own buckets on the next call."""
+    calls = []
+
+    def counting(name):
+        def launch(panel):
+            calls.append((name, panel.shape[1]))
+            return panel
+        return launch
+
+    with MultiTenantRuntime() as mtr:
+        mtr.add_tenant("a", TenantSpec(16, 4, counting("a")))
+        mtr.precompile()
+        assert sorted(calls) == [("a", 1), ("a", 2), ("a", 4)]
+        mtr.precompile()                              # fully warm: no calls
+        assert len(calls) == 3
+        mtr.add_tenant("b", TenantSpec(8, 2, counting("b")))
+        mtr.precompile()
+        assert sorted(calls[3:]) == [("b", 1), ("b", 2)]
+        # remove + re-add under the SAME name: the cache entries die with
+        # the old tenant, so the new one's buckets are warmed afresh
+        mtr.remove_tenant("a")
+        mtr.add_tenant("a", TenantSpec(16, 4, counting("a2")))
+        mtr.precompile()
+        assert sorted(calls[5:]) == [("a2", 1), ("a2", 2), ("a2", 4)]
+
+
+def test_launch_error_contained_to_tenant():
+    """A tenant whose launch raises fails ITS futures with the error; the
+    other tenant keeps serving normally."""
+    def broken(panel):
+        raise RuntimeError("tenant on fire")
+
+    with MultiTenantRuntime() as mtr:
+        bad = mtr.add_tenant("bad", TenantSpec(8, 2, broken))
+        good = mtr.add_tenant("good", _echo_spec())
+        bf = bad.submit(np.zeros(8, np.float32))
+        gf = good.submit(np.ones(16, np.float32))
+        mtr.flush()
+        with pytest.raises(RuntimeError, match="on fire"):
+            bf.result(timeout=30)
+        np.testing.assert_array_equal(gf.result(timeout=30),
+                                      np.full(16, 2.0))
+
+
+# ---------------------------------------------------------------------------
+# concurrent submitters (satellite: multi-thread producers)
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_submitters_two_tenants_no_lost_futures():
+    """Many host threads submitting concurrently to TWO tenants: no lost
+    futures, per-submitter result correctness (each thread tags its own
+    requests), and the accounting adds up."""
+    hm_a, _ = _system(300, 1, seed=3)
+    with MultiTenantRuntime() as mtr:
+        a = mtr.add_tenant("a", apply_tenant(hm_a, max_batch=4))
+        b = mtr.add_tenant("b", _echo_spec(n=24, scale=5.0, max_queue=32))
+        per_thread = 12
+        results = {}
+
+        def producer(tid):
+            handle, n = (a, 300) if tid % 2 == 0 else (b, 24)
+            futs = []
+            for j in range(per_thread):
+                v = np.full(n, 1.0 + tid + j / 100.0, np.float32)
+                futs.append((v, handle.submit(v)))
+            results[tid] = futs
+
+        threads = [threading.Thread(target=producer, args=(tid,))
+                   for tid in range(6)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=60)
+        assert not any(t.is_alive() for t in threads)
+        mtr.flush()
+        apply_ref = None
+        for tid, futs in results.items():
+            assert len(futs) == per_thread           # no lost futures
+            for v, f in futs:
+                out = f.result(timeout=120)
+                if tid % 2 == 0:
+                    # constant vector scaled: H @ (c * 1) == c * (H @ 1)
+                    if apply_ref is None:
+                        from repro.core import make_apply
+                        apply_ref = np.asarray(
+                            make_apply(hm_a)(np.ones(300, np.float32)))
+                    np.testing.assert_allclose(out, v[0] * apply_ref,
+                                               rtol=1e-4, atol=1e-4)
+                else:
+                    np.testing.assert_array_equal(out, v * 5.0)
+        assert a.stats["submitted"] == 3 * per_thread
+        assert b.stats["submitted"] == 3 * per_thread
+        assert sum(a.stats["launched_widths"]) >= 3 * per_thread
+        assert sum(b.stats["launched_widths"]) >= 3 * per_thread
+
+
+def test_concurrent_submitters_single_runtime():
+    """Satellite: multiple host threads into ONE PanelRuntime — no lost
+    futures, every submitter's results correct, backpressure sane."""
+    rt = PanelRuntime(8, 4, lambda p: p + 1.0, max_queue=16)
+    results = {}
+
+    def producer(tid):
+        futs = []
+        for j in range(20):
+            v = np.full(8, 10.0 * tid + j, np.float32)
+            futs.append((v, rt.submit(v)))
+        results[tid] = futs
+
+    threads = [threading.Thread(target=producer, args=(tid,))
+               for tid in range(5)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert not any(t.is_alive() for t in threads)
+    rt.flush()
+    for tid, futs in results.items():
+        assert len(futs) == 20
+        for v, f in futs:
+            np.testing.assert_array_equal(f.result(timeout=60), v + 1.0)
+    snap = rt.stats()
+    assert snap["max_queue_depth"] <= 16
+    assert sum(snap["launched_widths"]) == 100      # every request launched
+    rt.close()
+
+
+# ---------------------------------------------------------------------------
+# mesh: meshed tenants bit-identical to dedicated meshed runtimes
+# ---------------------------------------------------------------------------
+
+
+@requires_mesh
+def test_meshed_tenants_match_dedicated_servers():
+    """Tenants over a device mesh: width buckets stay multiples of the
+    device count, and results are bit-identical to each tenant's own
+    dedicated meshed server — apply- and solve-backed, ragged loads."""
+    from repro.parallel.hshard import make_panel_mesh
+    hm, F = _system(512, 8, seed=4)
+    mesh = make_panel_mesh(N_DEV)
+
+    with HMatrixServer(hm, max_batch=6, mesh=mesh) as srv, \
+            HMatrixSolveServer(hm, SIGMA2, max_batch=4, tol=1e-6,
+                               max_iter=400, mesh=mesh) as ssrv:
+        queries = [F[:, j] for j in range(7)]        # ragged
+        targets = [F[:, j] for j in range(5)]        # ragged
+        ded_q = srv.serve(queries)
+        ded_t = ssrv.serve(targets)
+        with MultiTenantRuntime() as mtr:
+            tq = mtr.add_tenant("apply", srv)
+            tt = mtr.add_tenant("solve", ssrv)
+            assert all(w % N_DEV == 0 for w in tq.widths)
+            assert all(w % N_DEV == 0 for w in tt.widths)
+            fq = [tq.submit(q) for q in queries]
+            ft = [tt.submit(t) for t in targets]
+            mtr.flush()
+            for j in range(7):
+                np.testing.assert_array_equal(fq[j].result(timeout=240),
+                                              ded_q[j])
+            for j in range(5):
+                np.testing.assert_array_equal(ft[j].result(timeout=240),
+                                              ded_t[j])
+
+
+# ---------------------------------------------------------------------------
+# subprocess self-runner: covers the mesh path in the plain tier-1 suite
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(jax.device_count() >= N_DEV,
+                    reason="mesh tests already ran directly")
+def test_tenancy_suite_under_forced_devices():
+    """Re-run this file under 4 forced host devices (subprocess so the
+    device count never leaks into the other tests — see conftest)."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (flags + " " if flags else "") + \
+        f"--xla_force_host_platform_device_count={N_DEV}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-m", "not slow", __file__],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert " passed" in out.stdout and "skipped" not in out.stdout, out.stdout
