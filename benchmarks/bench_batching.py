@@ -7,6 +7,8 @@ Fig 14 (size sweep): split the block set into groups of g blocks per call
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,6 +19,28 @@ from repro.core.geometry import gaussian_kernel
 from repro.core.hmatrix import _gather_cluster_points
 
 from .common import emit, timeit
+
+
+# jitted at module level: a jax.jit(lambda ...) inside run() would be a
+# fresh cache key per call (hlint: jit-hygiene), retracing every run
+@functools.partial(jax.jit, static_argnames=("k",))
+def _batched(r, c, k):
+    return batched_aca(r, c, gaussian_kernel, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _single(r, c, k):
+    return batched_aca(r[None], c[None], gaussian_kernel, k)
+
+
+@jax.jit
+def _dense_batched(r, c, x):
+    return jnp.einsum("bij,bj->bi", gaussian_kernel(r, c), x)
+
+
+@jax.jit
+def _dense_single(r, c, x):
+    return gaussian_kernel(r, c) @ x
 
 
 def _leaf_blocks(n, d, c_leaf):
@@ -39,27 +63,22 @@ def run(n: int = 16384, c_leaf: int = 128, k: int = 16):
     x = jnp.asarray(rng.randn(dr.shape[0], c_leaf).astype(np.float32))
 
     # ---- Fig 15: batched vs unbatched ACA --------------------------------
-    batched = jax.jit(lambda r, c: batched_aca(r, c, gaussian_kernel, k))
-    t_b = timeit(batched, rp, cp)
-    single = jax.jit(lambda r, c: batched_aca(r[None], c[None], gaussian_kernel, k))
+    t_b = timeit(_batched, rp, cp, k)
 
-    def loop_aca(rp, cp):
-        outs = [single(rp[i], cp[i]) for i in range(nb)]
-        return outs[-1]
+    def loop_aca(rp, cp, k):
+        # return the FULL list: timeit blocks on the returned pytree, and
+        # returning only outs[-1] would block on one launch out of nb
+        return [_single(rp[i], cp[i], k) for i in range(nb)]
 
-    t_u = timeit(loop_aca, rp, cp, warmup=1, iters=2)
+    t_u = timeit(loop_aca, rp, cp, k, warmup=1, iters=2)
     emit("fig15_aca_batched", t_b, f"blocks={nb}")
     emit("fig15_aca_unbatched", t_u, f"blocks={nb};speedup_x{t_u / t_b:.1f}")
 
     # ---- Fig 15: batched vs unbatched dense matvec -----------------------
-    dense_b = jax.jit(lambda r, c, x: jnp.einsum(
-        "bij,bj->bi", gaussian_kernel(r, c), x))
-    t_db = timeit(dense_b, dr, dc, x)
-    dense_1 = jax.jit(lambda r, c, x: gaussian_kernel(r, c) @ x)
+    t_db = timeit(_dense_batched, dr, dc, x)
 
     def loop_dense(dr, dc, x):
-        outs = [dense_1(dr[i], dc[i], x[i]) for i in range(dr.shape[0])]
-        return outs[-1]
+        return [_dense_single(dr[i], dc[i], x[i]) for i in range(dr.shape[0])]
 
     t_du = timeit(loop_dense, dr, dc, x, warmup=1, iters=2)
     emit("fig15_dense_batched", t_db, f"blocks={dr.shape[0]}")
@@ -72,10 +91,11 @@ def run(n: int = 16384, c_leaf: int = 128, k: int = 16):
         groups = nb // g
 
         def grouped(rp, cp):
-            out = None
+            outs = []
             for i in range(groups):
-                out = batched(rp[i * g:(i + 1) * g], cp[i * g:(i + 1) * g])
-            return out
+                outs.append(_batched(rp[i * g:(i + 1) * g],
+                                     cp[i * g:(i + 1) * g], k))
+            return outs
 
         t_g = timeit(grouped, rp, cp, warmup=1, iters=2)
         bs_bytes = g * c_leaf * k * 4

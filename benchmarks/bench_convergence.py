@@ -6,6 +6,7 @@ reproduced is the exponential convergence SHAPE, which is size-independent.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,7 +29,8 @@ def run(n: int = 2048, c_leaf: int = 128, eta: float = 1.5):
             for k in (2, 4, 8, 16):
                 hm = build_hmatrix(pts, kernel, k=k, c_leaf=cl_d, eta=eta)
                 z = make_matvec(hm)(x)
-                rel = float(jnp.linalg.norm(z - z_ref) / jnp.linalg.norm(z_ref))
+                rel = float(jax.device_get(
+                    jnp.linalg.norm(z - z_ref) / jnp.linalg.norm(z_ref)))
                 ratio = "" if prev is None else f";decay_x{prev / max(rel, 1e-12):.0f}"
                 emit(f"fig11_convergence_d{d}_{kernel}_k{k}", 0.0,
                      f"rel_err={rel:.3e}{ratio}")

@@ -37,8 +37,9 @@ def run(n: int = 8192, c_leaf: int = 128, k: int = 16,
         t_mm = timeit(apply_fn, X)
 
         def loop_mv(X):
-            outs = [apply_fn(X[:, j]) for j in range(r)]
-            return outs[-1]
+            # return the FULL list so timeit's block_until_ready waits on
+            # every launch, not just the last one (hlint: host-sync)
+            return [apply_fn(X[:, j]) for j in range(r)]
 
         # same iters as the matmat path: timeit takes the median, and a
         # 2-sample "median" is the max — that would bias the speedup up

@@ -117,7 +117,7 @@ def _starvation(specs, n_heavy, n_light, reps) -> dict:
                      for f in lf]
             h_lat = [f.result() is not None and time.monotonic() - t0h
                      for f in hf]
-            order = list(mtr.stats["launch_order"])
+            order = list(mtr.stats()["launch_order"])
         idx = [i for i, t in enumerate(order) if t == "light"]
         gaps = ([b - a - 1 for a, b in zip(idx, idx[1:])] if len(idx) > 1
                 else [0])

@@ -5,16 +5,24 @@ Prints ``name,us_per_call,derived`` CSV rows.  CPU-sized problem sizes
 benchmark reproduces are scale-free (convergence shape, complexity
 exponent, batching speedup factors).
 
-    PYTHONPATH=src python -m benchmarks.run [--quick | --smoke]
+    PYTHONPATH=src python -m benchmarks.run [--quick | --smoke] [--lint]
 
 ``--quick`` shrinks problem sizes for a laptop-scale sweep; ``--smoke``
 runs EVERY registered bench at tiny dispatch-check sizes (the CI floor:
-does each suite still run end to end and write its record).
+does each suite still run end to end and write its record).  ``--lint``
+runs the hlint device-discipline scan (`scripts/hlint/run.py`) as a
+pre-flight — a host-sync regression is caught in seconds instead of
+after an hour of timing runs — and its finding counts land in the
+`results/perf_trajectory.json` record alongside per-suite status.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+import subprocess
 import sys
+import time
 import traceback
 
 from . import (bench_batching, bench_compare, bench_complexity,
@@ -57,21 +65,81 @@ def _suites(args) -> list:
     ]
 
 
+_REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _lint_preflight() -> dict:
+    """Run hlint (stdlib subprocess) and return its JSON summary.
+
+    Aborts the benchmark run on any non-baselined finding: timing a tree
+    with a device-discipline regression measures the regression, not the
+    system.
+    """
+    proc = subprocess.run(
+        [sys.executable, str(_REPO / "scripts" / "hlint" / "run.py"),
+         "--json"],
+        capture_output=True, text=True, cwd=_REPO)
+    try:
+        report = json.loads(proc.stdout)
+    except json.JSONDecodeError:
+        print(proc.stdout, file=sys.stderr)
+        print(proc.stderr, file=sys.stderr)
+        sys.exit(f"# hlint pre-flight failed to produce JSON "
+                 f"(exit {proc.returncode})")
+    if not report["ok"]:
+        for f in report["findings"]:
+            print(f"# hlint: {f['path']}:{f['line']} [{f['rule']}] "
+                  f"{f['message']}", file=sys.stderr)
+        sys.exit("# hlint pre-flight found device-discipline regressions; "
+                 "fix them (or baseline with justification) before timing")
+    print(f"# hlint pre-flight: clean "
+          f"({report['baselined']} baselined finding(s))")
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller sizes")
     ap.add_argument("--smoke", action="store_true",
                     help="every registered bench at tiny CI sizes")
+    ap.add_argument("--lint", action="store_true",
+                    help="run the hlint device-discipline scan before "
+                         "benchmarking; abort on findings")
     args = ap.parse_args()
 
+    lint_report = _lint_preflight() if args.lint else None
+
     print("name,us_per_call,derived")
-    failed = []
+    failed, statuses = [], {}
     for name, fn in _suites(args):
+        t0 = time.perf_counter()
         try:
             fn()
+            statuses[name] = {"status": "ok",
+                              "seconds": round(time.perf_counter() - t0, 3)}
         except Exception:
             failed.append(name)
+            statuses[name] = {"status": "failed",
+                              "seconds": round(time.perf_counter() - t0, 3)}
             traceback.print_exc()
+
+    # perf-trajectory record: one file the CI history can diff run-over-run
+    # (suite pass/fail + how many accepted host-sync sites the tree carries)
+    traj = {
+        "mode": "smoke" if args.smoke else ("quick" if args.quick else "full"),
+        "suites": statuses,
+        "hlint": None if lint_report is None else {
+            "ok": lint_report["ok"],
+            "total_findings": lint_report["total_findings"],
+            "baselined": lint_report["baselined"],
+        },
+    }
+    out = _REPO / "results" / "perf_trajectory.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(traj, f, indent=2)
+    print(f"# wrote {out.relative_to(_REPO)}")
+
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)
         sys.exit(1)

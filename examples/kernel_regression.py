@@ -45,8 +45,8 @@ def main():
           f"per-target iterations {info.iters_per_column.tolist()}")
 
     op = make_apply(hm)
-    resid = float(jnp.linalg.norm(op(coef) + sigma2 * coef - F) /
-                  jnp.linalg.norm(F))
+    resid = float(jax.device_get(
+        jnp.linalg.norm(op(coef) + sigma2 * coef - F) / jnp.linalg.norm(F)))
     print(f"relative residual: {resid:.2e}")
 
 

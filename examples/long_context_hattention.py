@@ -6,6 +6,7 @@ runs a forward pass of the qwen2.5-14b-hmatrix smoke config.
 
     PYTHONPATH=src python examples/long_context_hattention.py
 """
+import functools
 import time
 
 import jax
@@ -15,6 +16,13 @@ import numpy as np
 from repro.core.hattention import causal_hmatrix_plan, h_attention
 from repro.configs.registry import get_smoke
 from repro.models.api import get_model
+
+
+# module-level jit: a jax.jit(lambda ...) inside main() would recompile on
+# every call of main (fresh cache key per lambda object)
+@functools.partial(jax.jit, static_argnames=("c_leaf", "rank"))
+def _h_fn(q, k, v, c_leaf, rank):
+    return h_attention(q, k, v, c_leaf=c_leaf, rank=rank)
 
 
 def main():
@@ -39,10 +47,9 @@ def main():
                     jnp.float32)
     v = jnp.asarray(rng.randn(1, s, 1, d), np.float32)
 
-    h_fn = jax.jit(lambda q, k, v: h_attention(q, k, v, c_leaf=c_leaf, rank=rank))
-    out_h = h_fn(q, k, v).block_until_ready()
+    out_h = _h_fn(q, k, v, c_leaf, rank).block_until_ready()
     t0 = time.perf_counter()
-    out_h = h_fn(q, k, v).block_until_ready()
+    out_h = _h_fn(q, k, v, c_leaf, rank).block_until_ready()
     print(f"h_attention: {time.perf_counter() - t0:.3f}s")
 
     # exact reference
@@ -59,7 +66,8 @@ def main():
     t0 = time.perf_counter()
     out_f = full_fn(q, k, v).block_until_ready()
     print(f"full attention: {time.perf_counter() - t0:.3f}s")
-    rel = float(jnp.linalg.norm(out_h - out_f) / jnp.linalg.norm(out_f))
+    rel = float(jax.device_get(
+        jnp.linalg.norm(out_h - out_f) / jnp.linalg.norm(out_f)))
     print(f"relative agreement: {rel:.3e}")
 
     # whole-model forward with the hmatrix backend
@@ -68,8 +76,9 @@ def main():
     params = model["init_params"](jax.random.PRNGKey(0))
     tokens = jax.random.randint(jax.random.PRNGKey(1), (1, 1024), 0, cfg.vocab_size)
     logits, _ = model["forward"](params=params, tokens=tokens, mode="train")
+    finite = bool(jax.device_get(jnp.all(jnp.isfinite(logits))))
     print(f"qwen2.5-14b-hmatrix smoke forward at S=1024: logits {logits.shape}, "
-          f"finite={bool(jnp.all(jnp.isfinite(logits)))}")
+          f"finite={finite}")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,7 @@
 """
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -31,7 +32,8 @@ def main():
           f"(vs O(N^2) dense product)")
 
     z_ref = dense_matvec_oracle(pts, "gaussian", x)
-    rel = float(jnp.linalg.norm(z - z_ref) / jnp.linalg.norm(z_ref))
+    rel = float(jax.device_get(
+        jnp.linalg.norm(z - z_ref) / jnp.linalg.norm(z_ref)))
     print(f"relative error vs dense oracle: {rel:.2e}")
 
     rep = hm.memory_report()

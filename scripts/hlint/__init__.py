@@ -1,0 +1,7 @@
+"""hlint: device-discipline static analysis for the H-matrix serving stack.
+
+Stdlib-only (``ast``-based, zero dependencies — the same pattern as
+``scripts/check_docs.py``), so it runs in CI without jax installed.  See
+``docs/DEVICE_DISCIPLINE.md`` for the invariants each rule enforces and
+``python scripts/hlint/run.py --help`` for usage.
+"""

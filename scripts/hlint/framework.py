@@ -1,0 +1,224 @@
+"""hlint rule framework: findings, suppressions, baseline, file walker.
+
+Design (mirrors ``scripts/check_docs.py``: stdlib only, runs without jax):
+
+* A **rule** is a named check.  File rules get ``(path, tree, lines)`` per
+  Python file and yield findings; project rules run once against the repo
+  root (structure checks that are not per-file, e.g. the kernel contract).
+* A **finding** is ``(rule, path, line, qualname, message)``.  Its baseline
+  key deliberately drops the line number, so unrelated edits above a
+  baselined site do not invalidate the baseline.
+* **Suppressions** are inline comments::
+
+      x = np.asarray(dev)   # hlint: disable=host-sync -- documented lazy fetch
+
+  The rule list may hold several comma-separated names.  The justification
+  after ``--`` is MANDATORY: a bare ``# hlint: disable=...`` is itself
+  reported (rule ``hlint-bare-suppression``).  A suppression on a line of
+  its own applies to the next code line.
+* The **baseline** (``scripts/hlint/baseline.json``) tracks pre-existing
+  findings that are accepted-with-reason rather than fixed.  Every entry
+  must carry a non-empty ``justification`` (``--update-baseline`` writes
+  ``TODO`` placeholders that fail the run until filled in).  Stale entries
+  (baselined but no longer found) fail the run too, so the baseline can
+  only shrink or be consciously edited.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent.parent
+BASELINE_PATH = Path(__file__).resolve().parent / "baseline.json"
+
+# directories walked for file rules (tests/ is deliberately excluded: test
+# bodies fetch results eagerly by design, and the hlint fixture corpus in
+# tests/test_hlint.py contains must-fire snippets)
+WALK_DIRS = ("src", "benchmarks", "examples")
+
+SUPPRESS_RE = re.compile(
+    r"#\s*hlint:\s*disable=([A-Za-z0-9_,\- ]+?)\s*(?:--\s*(.*))?$")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative, forward slashes
+    line: int
+    qualname: str      # enclosing module/class/function, dotted
+    message: str
+
+    def key(self) -> tuple:
+        return (self.rule, self.path, self.qualname, self.message)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.qualname}: " \
+               f"{self.message}"
+
+
+@dataclass
+class Suppression:
+    line: int
+    rules: tuple
+    justification: str
+    own_line: bool     # comment-only line: applies to the NEXT code line
+    used: bool = field(default=False)
+
+
+def parse_suppressions(lines: list[str]) -> list[Suppression]:
+    out = []
+    for i, raw in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(raw)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        just = (m.group(2) or "").strip()
+        own = raw.split("#", 1)[0].strip() == ""
+        out.append(Suppression(i, rules, just, own))
+    return out
+
+
+def apply_suppressions(findings: list[Finding],
+                       sups: list[Suppression]) -> list[Finding]:
+    """Drop findings covered by a justified suppression on the same line
+    (or, for comment-only suppressions, the line below); report bare
+    suppressions as findings themselves."""
+    by_line: dict[int, list[Suppression]] = {}
+    for s in sups:
+        target = s.line + 1 if s.own_line else s.line
+        by_line.setdefault(target, []).append(s)
+
+    kept = []
+    for f in findings:
+        hit = None
+        for s in by_line.get(f.line, []):
+            if f.rule in s.rules:
+                hit = s
+                break
+        if hit is None:
+            kept.append(f)
+        elif not hit.justification:
+            hit.used = True
+            kept.append(Finding(
+                "hlint-bare-suppression", f.path, hit.line, f.qualname,
+                f"suppression of [{f.rule}] carries no justification — "
+                f"use '# hlint: disable={f.rule} -- <reason>'"))
+        else:
+            hit.used = True
+    return kept
+
+
+class QualnameVisitor(ast.NodeVisitor):
+    """Base visitor that tracks the dotted qualname of the enclosing scope."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self.stack: list[str] = []
+        self.findings: list[Finding] = []
+
+    @property
+    def qualname(self) -> str:
+        return ".".join(self.stack) if self.stack else "<module>"
+
+    def emit(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(Finding(rule, self.path, node.lineno,
+                                     self.qualname, message))
+
+    def _scoped(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _scoped
+    visit_AsyncFunctionDef = _scoped
+    visit_ClassDef = _scoped
+
+
+# -- rule registry -----------------------------------------------------------
+
+FILE_RULES: list = []      # callables (path, tree, lines) -> [Finding]
+PROJECT_RULES: list = []   # callables (root) -> [Finding]
+
+
+def file_rule(fn):
+    FILE_RULES.append(fn)
+    return fn
+
+
+def project_rule(fn):
+    PROJECT_RULES.append(fn)
+    return fn
+
+
+def check_source(path: str, text: str) -> list[Finding]:
+    """Run every file rule on one source blob (``path`` is repo-relative —
+    rules scope themselves by it).  Applies inline suppressions."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding("hlint-parse", path, e.lineno or 1, "<module>",
+                        f"file does not parse: {e.msg}")]
+    lines = text.splitlines()
+    findings: list[Finding] = []
+    for rule in FILE_RULES:
+        findings.extend(rule(path, tree, lines))
+    return apply_suppressions(findings, parse_suppressions(lines))
+
+
+def walk_repo(root: Path | None = None) -> list[Finding]:
+    root = root or REPO_ROOT
+    findings: list[Finding] = []
+    for d in WALK_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            rel = p.relative_to(root).as_posix()
+            findings.extend(check_source(rel, p.read_text()))
+    for rule in PROJECT_RULES:
+        findings.extend(rule(root))
+    return findings
+
+
+# -- baseline ----------------------------------------------------------------
+
+def load_baseline(path: Path | None = None) -> list[dict]:
+    path = path or BASELINE_PATH
+    if not path.is_file():
+        return []
+    return json.loads(path.read_text())
+
+
+def save_baseline(entries: list[dict], path: Path | None = None):
+    path = path or BASELINE_PATH
+    path.write_text(json.dumps(entries, indent=2, sort_keys=True) + "\n")
+
+
+def baseline_key(entry: dict) -> tuple:
+    return (entry["rule"], entry["path"], entry["qualname"], entry["message"])
+
+
+def reconcile(findings: list[Finding], baseline: list[dict]):
+    """Split findings against the baseline.
+
+    Returns ``(new, matched, stale, unjustified)``: findings not baselined,
+    baseline entries that matched, baseline entries no longer found, and
+    baseline entries missing a real justification.
+    """
+    keys = {baseline_key(e): e for e in baseline}
+    found_keys = set()
+    new = []
+    for f in findings:
+        if f.key() in keys:
+            found_keys.add(f.key())
+        else:
+            new.append(f)
+    matched = [e for k, e in keys.items() if k in found_keys]
+    stale = [e for k, e in keys.items() if k not in found_keys]
+    unjustified = [e for e in baseline
+                   if not str(e.get("justification", "")).strip()
+                   or e.get("justification") == "TODO"]
+    return new, matched, stale, unjustified

@@ -1,0 +1,282 @@
+"""host-sync rule: implicit device->host transfers on device paths.
+
+Two scopes with different strictness (see ``docs/DEVICE_DISCIPLINE.md``):
+
+* **strict device-path modules** (``solve/``, ``core/hmatrix.py``,
+  ``kernels/*/ops.py``, the serve scheduler/launch path, ``parallel/
+  hshard.py``): besides the implicit syncs below, ANY host boundary —
+  ``np.asarray`` / ``np.array`` / ``jax.device_get`` — and any blocking
+  ``jax.block_until_ready`` on the serve launch path is flagged; only the
+  documented lazy-fetch sites are exempt (inline suppression or baseline).
+* **host-orchestration modules** (``launch/``, ``benchmarks/``,
+  ``examples/``): explicit fetches are the sanctioned way to cross the
+  boundary, so only IMPLICIT syncs are flagged — ``int()``/``float()``/
+  ``bool()`` on device values, ``.item()``/``.tolist()``, iterating a
+  device array — plus the partial-block timing bug (returning only the
+  last element of a list of async dispatches, so ``block_until_ready``
+  under-measures the loop).
+
+Device values are tracked by a deliberately conservative intra-function
+taint: calls rooted at ``jnp.``/``jax.`` taint their result (``jax.jit``
+taints the returned CALLABLE, so results of jitted step functions are
+device values), taint propagates through names, arithmetic, subscripts and
+calls-with-tainted-args, and is CLEARED by ``jax.device_get`` /
+``np.asarray`` and by trace-static attributes (``.shape``/``.ndim``/
+``.dtype``).  ``len()`` and ``jnp.asarray`` are not syncs and are not
+flagged (shape metadata / the sanctioned staging upload).
+"""
+from __future__ import annotations
+
+import ast
+
+from framework import QualnameVisitor, file_rule
+
+RULE = "host-sync"
+
+STRICT_PREFIXES = ("src/repro/solve/", "src/repro/serve/")
+STRICT_FILES = ("src/repro/core/hmatrix.py", "src/repro/parallel/hshard.py")
+ORCH_PREFIXES = ("src/repro/launch/", "benchmarks/", "examples/")
+
+# attributes that read trace-time metadata, never device data
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize", "weak_type"}
+# calls that move data to HOST explicitly: result is host data (untainted)
+TAINT_CLEARING = {("jax", "device_get"), ("np", "asarray"), ("np", "array"),
+                  ("numpy", "asarray"), ("numpy", "array")}
+# builtins that yield plain host values even when fed a device scalar
+# (range(n) syncs n ONCE; iterating it is not a per-row fetch)
+HOST_BUILTINS = {("range",), ("enumerate",), ("str",), ("repr",)}
+
+
+def scope_of(path: str) -> str | None:
+    if path.startswith(STRICT_PREFIXES) or path in STRICT_FILES:
+        return "strict"
+    if path.startswith("src/repro/kernels/") and path.endswith("/ops.py"):
+        return "strict"
+    if path.startswith(ORCH_PREFIXES):
+        return "orch"
+    return None
+
+
+def dotted(node: ast.AST) -> tuple:
+    """('jax', 'block_until_ready') for jax.block_until_ready, else ()."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return ()
+
+
+class Tainter:
+    """Intra-function device-value taint (shared with the jit-hygiene rule)."""
+
+    def __init__(self, tainted: set | None = None):
+        self.tainted = set(tainted or ())
+
+    def is_device(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Call):
+            d = dotted(node.func)
+            if d[:2] in TAINT_CLEARING or d[:1] in HOST_BUILTINS \
+                    or d[:1] in (("int",), ("float",), ("bool",), ("len",)):
+                return False
+            if d[:1] in (("jnp",), ("jax",)):
+                return True
+            # call of a tainted callable (e.g. a jax.jit result), or a call
+            # fed tainted operands, yields device data
+            if d and ".".join(d) in self.tainted:
+                return True
+            return any(self.is_device(a) for a in node.args)
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in STATIC_ATTRS:
+                return False
+            return ".".join(dotted(node)) in self.tainted \
+                or self.is_device(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_device(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_device(node.left) or self.is_device(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_device(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.is_device(node.left) \
+                or any(self.is_device(c) for c in node.comparators)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_device(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return self.is_device(node.body) or self.is_device(node.orelse)
+        return False
+
+    def assign(self, target: ast.AST, value_is_device: bool):
+        names = []
+        if isinstance(target, ast.Name):
+            names = [target.id]
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            names = [e.id for e in target.elts if isinstance(e, ast.Name)]
+        for n in names:
+            if value_is_device:
+                self.tainted.add(n)
+            else:
+                self.tainted.discard(n)
+
+
+class _HostSyncVisitor(QualnameVisitor):
+    def __init__(self, path: str, scope: str):
+        super().__init__(path)
+        self.scope = scope
+        self.taint_stack = [Tainter()]
+
+    @property
+    def taint(self) -> Tainter:
+        return self.taint_stack[-1]
+
+    def _scoped_fn(self, node):
+        # fresh taint env per function (inherits nothing: parameters are NOT
+        # assumed device values — that keeps the rule low-noise)
+        self.taint_stack.append(Tainter())
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+        self.taint_stack.pop()
+
+    visit_FunctionDef = _scoped_fn
+    visit_AsyncFunctionDef = _scoped_fn
+
+    def visit_Assign(self, node):
+        self.generic_visit(node)
+        dev = self.taint.is_device(node.value)
+        for t in node.targets:
+            self.taint.assign(t, dev)
+
+    def visit_AugAssign(self, node):
+        self.generic_visit(node)
+        if self.taint.is_device(node.value):
+            self.taint.assign(node.target, True)
+
+    def visit_For(self, node):
+        if self.taint.is_device(node.iter):
+            self.emit(RULE, node,
+                      "iterating a device array fetches it row by row — "
+                      "fetch once (np.asarray / jax.device_get) and iterate "
+                      "the host copy")
+            self.taint.assign(node.target, True)
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        d = dotted(node.func)
+        name = ".".join(d)
+        args_dev = any(self.taint.is_device(a) for a in node.args)
+
+        if d[:1] in (("int",), ("float",), ("bool",)) and args_dev:
+            self.emit(RULE, node,
+                      f"implicit device->host sync: {d[0]}() on a device "
+                      f"value blocks until the array is computed and "
+                      f"fetched")
+        elif d[:1] == ("len",) and args_dev and self.scope == "strict":
+            self.emit(RULE, node,
+                      "len() on a device value in a device-path module — "
+                      "use .shape[0] (static metadata; len fails on traced "
+                      "values under jit)")
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in ("item", "tolist") \
+                and self.taint.is_device(node.func.value):
+            self.emit(RULE, node,
+                      f"implicit device->host sync: .{node.func.attr}() on "
+                      f"a device value")
+        elif self.scope == "strict":
+            if d[:2] in TAINT_CLEARING or name == "jax.device_get":
+                self.emit(RULE, node,
+                          "host boundary: np.asarray/device_get in a "
+                          "device-path module — only documented fetch "
+                          "sites are exempt")
+            elif name == "jax.block_until_ready" \
+                    and self.path.startswith("src/repro/serve/"):
+                self.emit(RULE, node,
+                          "blocking jax.block_until_ready on the serve "
+                          "launch path serializes the panel pipeline")
+            elif d[:1] == ("print",) and args_dev:
+                self.emit(RULE, node,
+                          "printing a device value forces a device->host "
+                          "sync in a device-path module")
+        self.generic_visit(node)
+
+
+def _partial_block_findings(path: str, tree: ast.AST) -> list:
+    """benchmarks/examples: returning only the LAST element of a list of
+    async dispatches means ``jax.block_until_ready`` (e.g. in ``timeit``)
+    blocks on one launch out of many — the loop baseline under-measures."""
+    from framework import Finding
+    out = []
+
+    class V(QualnameVisitor):
+        def _fn(self, node):
+            listcomp_names = set()
+            loop_assigned = set()
+
+            def has_call(n):
+                return any(isinstance(x, ast.Call) for x in ast.walk(n))
+
+            for stmt in ast.walk(node):
+                if isinstance(stmt, ast.Assign) \
+                        and isinstance(stmt.value, ast.ListComp) \
+                        and has_call(stmt.value.elt):
+                    for t in stmt.targets:
+                        if isinstance(t, ast.Name):
+                            listcomp_names.add(t.id)
+                if isinstance(stmt, ast.For):
+                    for inner in ast.walk(stmt):
+                        if isinstance(inner, ast.Assign) \
+                                and isinstance(inner.value, ast.Call):
+                            for t in inner.targets:
+                                if isinstance(t, ast.Name):
+                                    refs = {n.id for n in
+                                            ast.walk(inner.value)
+                                            if isinstance(n, ast.Name)}
+                                    if t.id not in refs:
+                                        loop_assigned.add(t.id)
+
+            self.stack.append(node.name)
+            for stmt in ast.walk(node):
+                if not isinstance(stmt, ast.Return) or stmt.value is None:
+                    continue
+                v = stmt.value
+                if isinstance(v, ast.Subscript) \
+                        and isinstance(v.value, ast.Name) \
+                        and v.value.id in listcomp_names \
+                        and isinstance(v.slice, ast.UnaryOp) \
+                        and isinstance(v.slice.op, ast.USub):
+                    self.emit(RULE, stmt,
+                              "partial block: returning only the last "
+                              "element of a list of async dispatches — "
+                              "block_until_ready then waits on ONE launch; "
+                              "return the whole list (it is a pytree)")
+                elif isinstance(v, ast.Name) and v.id in loop_assigned:
+                    self.emit(RULE, stmt,
+                              "partial block: returning a value overwritten "
+                              "per loop iteration — earlier dispatches are "
+                              "never blocked on; accumulate and return all "
+                              "results")
+            self.stack.pop()
+
+        visit_FunctionDef = _fn
+        visit_AsyncFunctionDef = _fn
+
+    v = V(path)
+    v.visit(tree)
+    return v.findings
+
+
+@file_rule
+def host_sync_rule(path: str, tree: ast.AST, lines: list) -> list:
+    scope = scope_of(path)
+    if scope is None:
+        return []
+    v = _HostSyncVisitor(path, scope)
+    v.visit(tree)
+    findings = v.findings
+    if scope == "orch":
+        findings += _partial_block_findings(path, tree)
+    return findings

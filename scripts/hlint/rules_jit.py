@@ -1,0 +1,156 @@
+"""jit-hygiene rule: patterns that silently recompile or fail under jit.
+
+Checks (all scoped to the same walk dirs as host-sync — ``src``,
+``benchmarks``, ``examples``):
+
+* **jit-local-lambda** — ``jax.jit(lambda ...)`` inside a function body.
+  The jit compile cache is keyed on the function object; a fresh lambda is
+  a fresh key, so every call of the enclosing function retraces and
+  recompiles.  Hoist to a module-level named function (module-level
+  lambdas are created once and are allowed).
+* **traced-branch** — Python ``if``/``while`` on a traced value inside a
+  jitted function: fails at trace time with a ConcretizationTypeError.
+  Parameters are treated as traced except ``static_argnames``; shape/
+  dtype/ndim comparisons, ``is None`` checks, ``isinstance``/``callable``
+  tests, and comparisons against string constants (a non-array arg is
+  necessarily static) are exempt.
+* **static-mutable-default / mutable-default** — a ``static_argnames``
+  parameter with a list/dict/set default is unhashable (TypeError at call
+  time); any mutable default on a jitted function is captured at trace
+  time and silently shared across calls.
+"""
+from __future__ import annotations
+
+import ast
+
+from framework import QualnameVisitor, file_rule
+from rules_host_sync import Tainter, dotted
+
+RULE = "jit-hygiene"
+
+MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp)
+
+
+def _jit_decoration(node) -> dict | None:
+    """If ``node`` is jit-decorated, return {'static': set of param names}."""
+    for dec in node.decorator_list:
+        d = dotted(dec)
+        if d[-1:] == ("jit",):
+            return {"static": set()}
+        if isinstance(dec, ast.Call):
+            dc = dotted(dec.func)
+            if dc[-1:] == ("jit",):
+                return {"static": _static_names(dec, node)}
+            if dc[-1:] == ("partial",) and dec.args \
+                    and dotted(dec.args[0])[-1:] == ("jit",):
+                return {"static": _static_names(dec, node)}
+    return None
+
+
+def _static_names(call: ast.Call, fn) -> set:
+    static = set()
+    params = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    static.add(n.value)
+        elif kw.arg == "static_argnums":
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, int) \
+                        and 0 <= n.value < len(params):
+                    static.add(params[n.value])
+    return static
+
+
+def _branch_exempt(test: ast.AST) -> bool:
+    """Tests that are fine on traced values / clearly static."""
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) \
+                and any(isinstance(op, (ast.Is, ast.IsNot))
+                        for op in node.ops):
+            return True
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            return True      # branching against a string => static arg
+        if isinstance(node, ast.Call) \
+                and dotted(node.func)[-1:] in (("isinstance",), ("callable",),
+                                               ("hasattr",)):
+            return True
+    return False
+
+
+class _JitVisitor(QualnameVisitor):
+    def __init__(self, path: str):
+        super().__init__(path)
+        self.fn_depth = 0
+
+    def _scoped_fn(self, node):
+        jit = _jit_decoration(node)
+        if jit is not None:
+            self.stack.append(node.name)
+            self._check_jitted(node, jit["static"])
+            self.stack.pop()
+        self.fn_depth += 1
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+        self.fn_depth -= 1
+
+    visit_FunctionDef = _scoped_fn
+    visit_AsyncFunctionDef = _scoped_fn
+
+    def visit_Call(self, node):
+        if dotted(node.func)[-2:] == ("jax", "jit") and self.fn_depth > 0 \
+                and node.args and isinstance(node.args[0], ast.Lambda):
+            self.emit(RULE, node,
+                      "jax.jit(lambda ...) inside a function body — the "
+                      "compile cache is keyed on the function object, so "
+                      "every call retraces and recompiles; hoist to a "
+                      "module-level jitted function")
+        self.generic_visit(node)
+
+    def _check_jitted(self, node, static: set):
+        args = node.args
+        params = [a.arg for a in args.posonlyargs + args.args + args.kwonlyargs]
+        defaults = list(args.defaults)
+        pos = args.posonlyargs + args.args
+        defaulted = list(zip([a.arg for a in pos[len(pos) - len(defaults):]],
+                             defaults))
+        defaulted += [(a.arg, d) for a, d in zip(args.kwonlyargs,
+                                                 args.kw_defaults) if d]
+        for name, default in defaulted:
+            if isinstance(default, MUTABLE_LITERALS):
+                if name in static:
+                    self.emit(RULE, default,
+                              f"static arg '{name}' has an unhashable "
+                              f"mutable default — jit static args are cache "
+                              f"keys and must be hashable")
+                else:
+                    self.emit(RULE, default,
+                              f"mutable default for '{name}' on a jitted "
+                              f"function is captured at trace time and "
+                              f"shared across every call")
+
+        taint = Tainter(set(params) - static)
+        for stmt in ast.walk(node):
+            if isinstance(stmt, ast.Assign):
+                dev = taint.is_device(stmt.value)
+                for t in stmt.targets:
+                    taint.assign(t, dev)
+        for stmt in ast.walk(node):
+            if isinstance(stmt, (ast.If, ast.While)) \
+                    and taint.is_device(stmt.test) \
+                    and not _branch_exempt(stmt.test):
+                kind = "if" if isinstance(stmt, ast.If) else "while"
+                self.emit(RULE, stmt,
+                          f"Python '{kind}' on a traced value inside a "
+                          f"jitted function — fails at trace time; use "
+                          f"jnp.where / lax.cond, or mark the arg static")
+
+
+@file_rule
+def jit_rule(path: str, tree: ast.AST, lines: list) -> list:
+    v = _JitVisitor(path)
+    v.visit(tree)
+    return v.findings

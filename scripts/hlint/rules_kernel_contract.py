@@ -1,0 +1,103 @@
+"""kernel-contract rule: structural invariants for ``src/repro/kernels/*``.
+
+Every kernel package must ship the three-file contract:
+
+* ``kernel.py`` — the Pallas kernel,
+* ``ref.py``    — the pure-jnp reference implementation,
+* ``ops.py``    — the public dispatcher.
+
+And every public dispatcher in ``ops.py`` must degrade gracefully:
+
+* the module defines a ``VMEM_BUDGET`` constant, and
+* each public function references a ``*_ref`` fallback (the branch taken
+  when the working set exceeds the budget — Pallas tiles that overflow
+  VMEM fail at compile time on real hardware, so the dispatcher, not the
+  caller, owns the decision),
+* the package is exercised by a kernel-vs-ref test: its name appears in at
+  least one ``tests/*.py``.
+
+This is a project rule (it checks tree structure, not one file), so inline
+suppressions do not apply — fix the package or baseline with justification.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from framework import Finding, project_rule
+
+RULE = "kernel-contract"
+REQUIRED = ("kernel.py", "ref.py", "ops.py")
+
+
+def _public_functions(tree: ast.AST):
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and not node.name.startswith("_"):
+            yield node
+
+
+def _references_ref_fallback(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id.endswith("_ref"):
+            return True
+        if isinstance(node, ast.Attribute) and node.attr.endswith("_ref"):
+            return True
+    return False
+
+
+def _has_vmem_budget(tree: ast.AST) -> bool:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "VMEM_BUDGET":
+                    return True
+    return False
+
+
+@project_rule
+def kernel_contract_rule(root: Path) -> list:
+    findings: list[Finding] = []
+    kdir = root / "src" / "repro" / "kernels"
+    if not kdir.is_dir():
+        return findings
+
+    test_blob = "".join(p.read_text() for p in sorted(
+        (root / "tests").glob("*.py"))) if (root / "tests").is_dir() else ""
+
+    for pkg in sorted(p for p in kdir.iterdir() if p.is_dir()):
+        if pkg.name.startswith(("_", ".")):
+            continue
+        rel = pkg.relative_to(root).as_posix()
+        for req in REQUIRED:
+            if not (pkg / req).is_file():
+                findings.append(Finding(
+                    RULE, rel, 1, pkg.name,
+                    f"kernel package is missing '{req}' (contract: "
+                    f"kernel.py + ref.py + ops.py)"))
+        ops = pkg / "ops.py"
+        if ops.is_file():
+            try:
+                tree = ast.parse(ops.read_text())
+            except SyntaxError as e:
+                findings.append(Finding(RULE, f"{rel}/ops.py", e.lineno or 1,
+                                        pkg.name, "ops.py does not parse"))
+                continue
+            has_budget = _has_vmem_budget(tree)
+            for fn in _public_functions(tree):
+                if not _references_ref_fallback(fn):
+                    findings.append(Finding(
+                        RULE, f"{rel}/ops.py", fn.lineno, fn.name,
+                        "dispatcher has no *_ref fallback branch — an "
+                        "over-VMEM-budget shape must fall back to the "
+                        "reference path, not fail at Pallas compile time"))
+                elif not has_budget:
+                    findings.append(Finding(
+                        RULE, f"{rel}/ops.py", fn.lineno, fn.name,
+                        "ops.py defines no VMEM_BUDGET constant to size "
+                        "the fallback decision"))
+        if pkg.name not in test_blob:
+            findings.append(Finding(
+                RULE, rel, 1, pkg.name,
+                "no kernel-vs-ref test references this package in tests/"))
+    return findings

@@ -1,0 +1,180 @@
+"""lock-discipline rule: guarded fields touched outside the runtime lock.
+
+The serve schedulers (``serve/runtime.py``, ``serve/tenancy.py``) share
+mutable state between the submit thread and the scheduler thread under a
+single condition variable ``_cv``.  The bug class this rule encodes is the
+one PR 5 fixed by hand: a field mutated under the lock somewhere must be
+accessed under the lock *everywhere* — a lone unlocked read is a data race
+even if it "usually works".
+
+The rule is driven by ``LOCK_REGISTRY``, a per-file registry of guarded
+attribute names (tests inject their own registry):
+
+* ``full``      — every load/store of the attribute must be lexically
+                  inside ``with <obj>._cv:`` or inside a method listed in
+                  ``locked_methods`` (methods whose contract is "caller
+                  holds the lock"); ``__init__`` is exempt (no concurrent
+                  access before construction completes).
+* ``subscript`` — only subscripted access (``self.stats["launched"]``)
+                  needs the lock; passing the object or calling the
+                  ``.stats()`` snapshot method is fine.
+* ``no_rebind`` — the attribute may be mutated in place anywhere its mode
+                  allows, but NEVER rebound (``self.last_info = deque()``)
+                  outside ``__init__``: another thread holding the old
+                  reference keeps appending to an orphan.
+
+A second check, applied OUTSIDE ``src/repro/serve/``, flags subscripting a
+live ``.stats`` attribute (``rt.stats["launch_order"]``) — callers must use
+the ``.stats()`` method, which snapshots under the lock.
+"""
+from __future__ import annotations
+
+import ast
+
+from framework import QualnameVisitor, file_rule
+
+RULE = "lock-discipline"
+LOCK_ATTR = "_cv"
+
+LOCK_REGISTRY = {
+    "src/repro/serve/runtime.py": {
+        "full": {"_pending", "_flush_goal", "_launched", "_submitted",
+                 "_in_launch", "_closing", "_closed", "_thread"},
+        "subscript": {"stats"},
+        "no_rebind": set(),
+        "locked_methods": {"_check_open", "_next_deadline", "_ensure_thread"},
+    },
+    "src/repro/serve/tenancy.py": {
+        "full": {"_tenants", "_compiled", "_launch_seq", "_closing",
+                 "_closed", "_thread",
+                 # _Tenant fields (attr-name match on any receiver)
+                 "pending", "submitted", "launched", "flush_goal",
+                 "in_launch", "deficit", "last_served", "removing",
+                 "weight"},
+        "subscript": {"stats"},
+        "no_rebind": set(),
+        "locked_methods": {"drained", "_check_open", "_check_submittable",
+                           "_select", "_ready", "_next_deadline", "_pick",
+                           "_ensure_thread_locked"},
+    },
+    "src/repro/serve/step.py": {
+        "full": set(),
+        "subscript": set(),
+        "no_rebind": {"last_info"},
+        "locked_methods": set(),
+    },
+}
+
+
+def _is_lock_ctx(expr: ast.AST) -> bool:
+    return isinstance(expr, ast.Attribute) and expr.attr == LOCK_ATTR
+
+
+class _LockVisitor(QualnameVisitor):
+    def __init__(self, path: str, reg: dict):
+        super().__init__(path)
+        self.reg = reg
+        self.lock_depth = 0
+        self.method_stack: list[str] = []
+
+    def _exempt(self) -> bool:
+        if self.lock_depth > 0:
+            return True
+        for m in self.method_stack:
+            # constructors run before the object is shared across threads
+            if m in ("__init__", "__post_init__") \
+                    or m in self.reg["locked_methods"]:
+                return True
+        return False
+
+    def _scoped_fn(self, node):
+        self.method_stack.append(node.name)
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+        self.method_stack.pop()
+
+    visit_FunctionDef = _scoped_fn
+    visit_AsyncFunctionDef = _scoped_fn
+
+    def visit_With(self, node):
+        locked = any(_is_lock_ctx(item.context_expr) for item in node.items)
+        for item in node.items:
+            self.visit(item.context_expr)
+        if locked:
+            self.lock_depth += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        if locked:
+            self.lock_depth -= 1
+
+    def visit_Assign(self, node):
+        for t in node.targets:
+            if isinstance(t, ast.Attribute) and t.attr in self.reg["no_rebind"] \
+                    and "__init__" not in self.method_stack:
+                self.emit(RULE, t,
+                          f"rebinding guarded attribute '.{t.attr}' outside "
+                          f"__init__ — another thread keeps appending to the "
+                          f"orphaned old object; mutate in place "
+                          f"(.clear()) instead")
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node):
+        if node.attr in self.reg["full"] and not self._exempt():
+            self.emit(RULE, node,
+                      f"guarded attribute '.{node.attr}' accessed outside "
+                      f"'with ...{LOCK_ATTR}:' — fields mutated under the "
+                      f"lock must be read under it too")
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node):
+        if isinstance(node.value, ast.Attribute) \
+                and node.value.attr in self.reg["subscript"] \
+                and not self._exempt():
+            self.emit(RULE, node,
+                      f"subscripting guarded '.{node.value.attr}' outside "
+                      f"the lock — a concurrent scheduler mutation races "
+                      f"this access")
+            # don't double-report via visit_Attribute (subscript mode only)
+            for child in ast.iter_child_nodes(node.value):
+                self.visit(child)
+            self.visit(node.slice)
+            return
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        # calling a lock-contract method without holding the lock
+        if isinstance(node.func, ast.Attribute) \
+                and node.func.attr in self.reg["locked_methods"] \
+                and not self._exempt():
+            self.emit(RULE, node,
+                      f"'{node.func.attr}()' assumes the caller holds "
+                      f"{LOCK_ATTR} but is called outside 'with "
+                      f"...{LOCK_ATTR}:'")
+        self.generic_visit(node)
+
+
+class _LiveStatsVisitor(QualnameVisitor):
+    """Outside serve/: ``obj.stats[...]`` reads a live, lock-guarded dict."""
+
+    def visit_Subscript(self, node):
+        if isinstance(node.value, ast.Attribute) and node.value.attr == "stats":
+            self.emit(RULE, node,
+                      "subscripting a live '.stats' attribute — call "
+                      "'.stats()' for a snapshot taken under the runtime "
+                      "lock")
+        self.generic_visit(node)
+
+
+@file_rule
+def lock_rule(path: str, tree: ast.AST, lines: list) -> list:
+    reg = LOCK_REGISTRY.get(path)
+    if reg is not None:
+        v = _LockVisitor(path, reg)
+        v.visit(tree)
+        return v.findings
+    if path.startswith(("benchmarks/", "examples/", "src/repro/launch/")):
+        v = _LiveStatsVisitor(path)
+        v.visit(tree)
+        return v.findings
+    return []

@@ -1,0 +1,120 @@
+#!/usr/bin/env python3
+"""hlint entry point.
+
+Usage::
+
+    python scripts/hlint/run.py                 # lint the repo vs baseline
+    python scripts/hlint/run.py path/to/file.py # lint specific files only
+    python scripts/hlint/run.py --json          # machine-readable output
+    python scripts/hlint/run.py --update-baseline
+
+Exit status is 0 iff there are no non-baselined findings, no stale baseline
+entries, and every baseline entry carries a justification.  Stdlib only —
+safe to run in CI without jax installed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+
+import framework  # noqa: E402
+# importing the rule modules registers them
+import rules_host_sync   # noqa: E402,F401
+import rules_lock        # noqa: E402,F401
+import rules_kernel_contract  # noqa: E402,F401
+import rules_jit         # noqa: E402,F401
+
+
+def _finding_dict(f):
+    return {"rule": f.rule, "path": f.path, "line": f.line,
+            "qualname": f.qualname, "message": f.message}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="device-discipline linter")
+    ap.add_argument("paths", nargs="*",
+                    help="specific files to lint (default: whole repo, "
+                         "reconciled against the baseline)")
+    ap.add_argument("--json", action="store_true", dest="as_json")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite baseline.json from the current findings "
+                         "(new entries get justification=TODO, which still "
+                         "fails the run until filled in)")
+    args = ap.parse_args(argv)
+
+    root = framework.REPO_ROOT
+    if args.paths:
+        findings = []
+        for p in args.paths:
+            path = Path(p)
+            rel = path.resolve().relative_to(root).as_posix() \
+                if path.is_absolute() else Path(p).as_posix()
+            findings.extend(framework.check_source(rel,
+                                                   (root / rel).read_text()))
+        baseline = framework.load_baseline()
+        keys = {framework.baseline_key(e) for e in baseline}
+        new = [f for f in findings if f.key() not in keys]
+        stale, unjustified = [], []
+    else:
+        findings = framework.walk_repo(root)
+        baseline = framework.load_baseline()
+        new, matched, stale, unjustified = framework.reconcile(findings,
+                                                               baseline)
+
+    if args.update_baseline:
+        old = {framework.baseline_key(e): e for e in baseline}
+        entries = []
+        for f in findings:
+            e = old.get(f.key())
+            entries.append({
+                "rule": f.rule, "path": f.path, "qualname": f.qualname,
+                "message": f.message,
+                "justification": e["justification"] if e else "TODO",
+            })
+        # dedup identical keys (several findings can share one entry)
+        seen, uniq = set(), []
+        for e in entries:
+            k = framework.baseline_key(e)
+            if k not in seen:
+                seen.add(k)
+                uniq.append(e)
+        framework.save_baseline(uniq)
+        print(f"wrote {len(uniq)} entries to {framework.BASELINE_PATH}")
+        return 0
+
+    ok = not new and not stale and not unjustified
+    if args.as_json:
+        print(json.dumps({
+            "findings": [_finding_dict(f) for f in new],
+            "stale_baseline": stale,
+            "unjustified_baseline": unjustified,
+            "total_findings": len(findings),
+            "baselined": len(findings) - len(new),
+            "ok": ok,
+        }, indent=2))
+        return 0 if ok else 1
+
+    for f in sorted(new, key=lambda f: (f.path, f.line)):
+        print(f.format())
+    for e in stale:
+        print(f"stale baseline entry (fixed? remove it): "
+              f"{e['path']} [{e['rule']}] {e['qualname']}")
+    for e in unjustified:
+        print(f"baseline entry lacks justification: "
+              f"{e['path']} [{e['rule']}] {e['qualname']}")
+    if ok:
+        n = len(findings) - len(new)
+        print(f"hlint: clean ({n} baselined finding(s), "
+              f"{len(baseline)} baseline entr{'y' if len(baseline) == 1 else 'ies'})")
+    else:
+        print(f"hlint: {len(new)} new finding(s), {len(stale)} stale, "
+              f"{len(unjustified)} unjustified baseline entr(ies)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,9 +2,14 @@
 # Tier-1 verification (ROADMAP.md): the full suite, fail-fast.
 #   scripts/test.sh            full tier-1 run
 #   scripts/test.sh --fast     smoke loop (-m "not slow", stays under ~2 min)
+#   scripts/test.sh --lint     hlint device-discipline scan (stdlib-only)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [[ "${1:-}" == "--lint" ]]; then
+    shift
+    exec python scripts/hlint/run.py "$@"
+fi
 if [[ "${1:-}" == "--fast" ]]; then
     shift
     exec python -m pytest -x -q -m "not slow" "$@"

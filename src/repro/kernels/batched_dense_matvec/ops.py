@@ -11,6 +11,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .kernel import batched_kernel_matmat_t, batched_kernel_matvec_t
+from .ref import batched_kernel_matmat_ref, batched_kernel_matvec_ref
+
+# Conservative VMEM budget for one program's working set (bytes).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _vmem_bytes(c: int, d: int, r: int = 1, itemsize: int = 4) -> int:
+    # generated (C, C) block + two (d, C) point tiles + (C, R) operand/out
+    return itemsize * (c * c + 2 * d * c + 2 * c * r)
 
 
 def batched_kernel_matvec(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
@@ -30,8 +39,12 @@ def batched_kernel_matvec(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
     -------
     y : jnp.ndarray, shape (B, C)
         Per-block products; the kernel block is generated in VMEM and never
-        materialised in HBM (paper §5.4.2).
+        materialised in HBM (paper §5.4.2).  Leaf sizes whose working set
+        exceeds ``VMEM_BUDGET`` fall back to the jnp reference path.
     """
+    _, c, d = rows.shape
+    if _vmem_bytes(c, d) > VMEM_BUDGET:
+        return batched_kernel_matvec_ref(rows, cols, x, kernel_name)
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)
     return batched_kernel_matvec_t(rows_t, cols_t, x, kernel_name)
@@ -55,7 +68,12 @@ def batched_kernel_matmat(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
     y : jnp.ndarray, shape (B, C, R)
         Per-block (C, C) @ (C, R) MXU contractions; the kernel block is
         generated once per program and amortised over all R columns.
+        Shapes whose working set exceeds ``VMEM_BUDGET`` fall back to the
+        jnp reference path.
     """
+    _, c, d = rows.shape
+    if _vmem_bytes(c, d, x.shape[2]) > VMEM_BUDGET:
+        return batched_kernel_matmat_ref(rows, cols, x, kernel_name)
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)
     return batched_kernel_matmat_t(rows_t, cols_t, x, kernel_name)

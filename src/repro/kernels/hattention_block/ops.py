@@ -2,6 +2,16 @@
 from __future__ import annotations
 
 from .kernel import hattention_nearfield
+from .ref import hattention_nearfield_ref
+
+# Conservative VMEM budget for one program's working set (bytes).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _vmem_bytes(c: int, d: int, itemsize: int = 4) -> int:
+    # q + 2*(k, v) + num tiles of (c, d), two (c, c) score blocks, and the
+    # (c,) den/m accumulators of the stable-softmax merge
+    return itemsize * (6 * c * d + 2 * c * c + 4 * c)
 
 
 def hattention_nearfield_op(q, k, v):
@@ -22,6 +32,10 @@ def hattention_nearfield_op(q, k, v):
         Softmax denominator partial sums.
     m : jnp.ndarray, shape (BH, n_leaf, c)
         Per-row running max (for the numerically stable merge with the
-        far-field contributions).
+        far-field contributions).  Leaf sizes whose working set exceeds
+        ``VMEM_BUDGET`` fall back to the jnp reference path.
     """
+    c, d = q.shape[-2], q.shape[-1]
+    if _vmem_bytes(c, d) > VMEM_BUDGET:
+        return hattention_nearfield_ref(q, k, v)
     return hattention_nearfield(q, k, v)

@@ -4,6 +4,16 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from .kernel import TILE, morton_encode_t
+from .ref import morton_encode_ref
+
+# Conservative VMEM budget for one program's working set (bytes).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _vmem_bytes(d: int, itemsize: int = 4) -> int:
+    # one (d, TILE) coordinate tile plus the hi/lo uint32 output lanes and
+    # the per-dimension interleave scratch
+    return itemsize * TILE * (2 * d + 2)
 
 
 def morton_encode_pallas(coords: jnp.ndarray):
@@ -20,9 +30,12 @@ def morton_encode_pallas(coords: jnp.ndarray):
     hi, lo : jnp.ndarray, uint32, shape (N,)
         High and low 32-bit halves of each 64-bit interleaved code.  The
         lane dimension is padded to a multiple of ``TILE`` for the kernel
-        and sliced back before returning.
+        and sliced back before returning.  Dimensions whose working set
+        exceeds ``VMEM_BUDGET`` fall back to the jnp reference path.
     """
     n, d = coords.shape
+    if _vmem_bytes(d) > VMEM_BUDGET:
+        return morton_encode_ref(coords)
     n_pad = ((n + TILE - 1) // TILE) * TILE
     coords_t = jnp.swapaxes(coords, 0, 1)
     if n_pad != n:

@@ -73,7 +73,7 @@ def main():
     out = jnp.concatenate(generated, axis=1)
     print(f"decode: {args.decode_steps - 1} steps in {t_dec:.3f}s "
           f"({b * (args.decode_steps - 1) / max(t_dec, 1e-9):.0f} tok/s)")
-    print("generated token ids (first row):", out[0].tolist())
+    print("generated token ids (first row):", jax.device_get(out[0]).tolist())
 
 
 if __name__ == "__main__":

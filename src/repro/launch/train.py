@@ -54,12 +54,15 @@ def train_loop(cfg, args):
                            with_embeds=with_embeds)
         state, metrics = step_fn(state, batch)
         if step % args.log_every == 0 or step == args.steps - 1:
-            loss = float(metrics["loss"])
+            # ONE device fetch for every logged scalar: three float() calls
+            # would block the dispatch pipeline three times per log step
+            m = jax.device_get(metrics)
+            loss = float(m["loss"])
             dt = time.perf_counter() - t_last
             t_last = time.perf_counter()
             slow = straggler.record("host0", dt)
-            print(f"step {step:6d}  loss {loss:.4f}  lr {float(metrics['lr']):.2e}"
-                  f"  gnorm {float(metrics['grad_norm']):.2f}  {dt:.2f}s"
+            print(f"step {step:6d}  loss {loss:.4f}  lr {float(m['lr']):.2e}"
+                  f"  gnorm {float(m['grad_norm']):.2f}  {dt:.2f}s"
                   f"{'  [STRAGGLER]' if slow else ''}", flush=True)
         if step > 0 and step % args.ckpt_every == 0:
             mgr.save(step + 1, state, extra={"data_step": step + 1})

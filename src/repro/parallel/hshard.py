@@ -60,6 +60,7 @@ def make_panel_mesh(n_devices: int | None = None) -> Mesh:
     subset of its axes instead.
     """
     n = jax.device_count() if n_devices is None else n_devices
+    # hlint: disable=host-sync -- np.asarray over device HANDLES (mesh construction at setup), not array data
     return Mesh(np.asarray(jax.devices()[:n]), ("data",))
 
 

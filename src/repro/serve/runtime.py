@@ -62,6 +62,8 @@ panels via the same width buckets — results are bit-identical to
 """
 from __future__ import annotations
 
+import contextlib
+import os
 import threading
 import time
 from collections import deque
@@ -70,6 +72,29 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _strict_transfer_guard():
+    """Disallow implicit host transfers when ``REPRO_STRICT_TRANSFERS=1``.
+
+    The runtime twin of the hlint host-sync rule (docs/DEVICE_DISCIPLINE.md):
+    wrapped around the scheduler's launch hot path so any IMPLICIT
+    host<->device transfer a launch closure sneaks in (a Python scalar
+    mixed into an eager op, an accidental device indexing, an eager result
+    fetch) raises instead of silently serializing the pipeline.  Guards
+    both host directions but NOT device-to-device: mesh resharding of the
+    panel across devices is legitimate device-side work, and the invariant
+    being enforced is "zero host syncs between submit and fetch".  The
+    panel upload itself stays legal — ``jnp.asarray``/``jax.device_put``
+    are explicit transfers, which the guard permits.  Read per call so
+    tests can flip the env var at runtime.
+    """
+    if os.environ.get("REPRO_STRICT_TRANSFERS") == "1":
+        stack = contextlib.ExitStack()
+        stack.enter_context(jax.transfer_guard_host_to_device("disallow"))
+        stack.enter_context(jax.transfer_guard_device_to_host("disallow"))
+        return stack
+    return contextlib.nullcontext()
 
 # width fractions of the full panel pre-compiled for partial flushes
 _BUCKET_FRACTIONS = (4, 2, 1)
@@ -152,6 +177,7 @@ class _PanelRecord:
     def host(self) -> np.ndarray:
         with self._lock:
             if self._host is None:
+                # hlint: disable=host-sync -- THE documented lazy fetch: one blocking transfer per panel, cached for every column future
                 self._host = np.asarray(self._dev)
                 self._dev = None
             return self._host
@@ -235,6 +261,7 @@ class LaunchPacer:
         """
         while len(self._inflight) >= self.max_inflight:
             try:
+                # hlint: disable=host-sync -- pacing backpressure by design: block on the OLDEST launch only when the inflight window is full
                 jax.block_until_ready(self._inflight.pop(0))
             except Exception:
                 # async dispatch defers device failures to the first
@@ -289,7 +316,8 @@ class PanelLane:
         try:
             # jnp.asarray on CPU can zero-copy ALIAS the staging buffer —
             # safe ONLY because of the pacing invariant (see LaunchPacer).
-            dev = self._launch(jnp.asarray(buf[:, :w]))
+            with _strict_transfer_guard():
+                dev = self._launch(jnp.asarray(buf[:, :w]))
         except Exception as exc:                    # propagate to awaiters
             # _buf deliberately NOT advanced: nothing holds this buffer (a
             # failing launch must raise before dispatching work that reads
@@ -310,6 +338,7 @@ class PanelLane:
     def precompile_width(self, w: int):
         """Warm the launch callable on a zero ``(n, w)`` panel (blocking)."""
         z = jnp.asarray(np.zeros((self.n, w), np.float32))
+        # hlint: disable=host-sync -- blocking warmup/compile path, documented as such; never runs between submit and fetch
         jax.block_until_ready(self._launch(z))
 
 
@@ -396,6 +425,7 @@ class PanelRuntime:
         Blocks only for backpressure (``max_queue``); never for the device.
         Raises ``RuntimeError`` once the runtime has been closed.
         """
+        # hlint: disable=host-sync -- client-side input normalization of host data on the submit thread; the h2d upload happens once per panel at launch
         q = np.asarray(vec, dtype=np.float32)
         if q.shape != (self.n,):
             raise ValueError(f"request shape {q.shape} != ({self.n},)")

@@ -346,13 +346,16 @@ class HMatrixSolveServer(_PanelServerBase):
             active mask starts False), so short panels cost no extra
             iterations.
         """
-        self.last_info = deque(maxlen=self.LAST_INFO_MAX)
+        # clear in place, NOT `= deque(...)`: the scheduler thread's launch
+        # closure holds a reference to this deque, and rebinding would leave
+        # it appending to the orphaned old object (hlint: lock-discipline)
+        self.last_info.clear()
         return super().serve(targets)
 
     def precompile(self):
         """Warm every width bucket; the warmup panels' records are dropped."""
         super().precompile()
-        self.last_info = deque(maxlen=self.LAST_INFO_MAX)
+        self.last_info.clear()
 
 
 def greedy_sample(logits, vocab_size: int):

@@ -209,7 +209,9 @@ class TenantHandle:
 
     @property
     def weight(self) -> float:
-        return self._tenant.weight
+        # set_weight mutates this under the runtime lock; read it there too
+        with self._runtime._cv:
+            return self._tenant.weight
 
     @property
     def stats(self) -> _Stats:
@@ -339,6 +341,7 @@ class MultiTenantRuntime:
     # -- client side --------------------------------------------------------
 
     def _submit(self, tenant: _Tenant, vec) -> PanelFuture:
+        # hlint: disable=host-sync -- client-side input normalization of host data on the submit thread; the h2d upload happens once per panel at launch
         q = np.asarray(vec, dtype=np.float32)
         if q.shape != (tenant.lane.n,):
             raise ValueError(f"request shape {q.shape} != ({tenant.lane.n},) "

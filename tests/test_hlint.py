@@ -1,0 +1,491 @@
+"""hlint (scripts/hlint): must-fire / must-not-fire fixtures per rule,
+suppression parsing, baseline round-trip, and the meta-test that the
+committed baseline matches a fresh run of the repo.
+
+Stdlib only — none of these tests import jax, mirroring the CI hlint job.
+"""
+import json
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+HLINT_DIR = Path(__file__).resolve().parent.parent / "scripts" / "hlint"
+sys.path.insert(0, str(HLINT_DIR))
+
+import framework                     # noqa: E402
+import rules_host_sync               # noqa: E402,F401  (registers rules)
+import rules_lock                    # noqa: E402
+import rules_kernel_contract         # noqa: E402,F401
+import rules_jit                     # noqa: E402,F401
+
+STRICT = "src/repro/solve/fixture.py"      # strict device-path scope
+ORCH = "benchmarks/bench_fixture.py"       # host-orchestration scope
+
+
+def lint(path, src):
+    return framework.check_source(path, textwrap.dedent(src))
+
+
+def rules_of(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+
+def test_host_sync_float_on_device_value_fires():
+    fs = lint(STRICT, """\
+        import jax.numpy as jnp
+        def f(x):
+            r = jnp.sum(x)
+            return float(r)
+        """)
+    assert len(rules_of(fs, "host-sync")) == 1
+    assert "float()" in fs[0].message and fs[0].qualname == "f"
+
+
+def test_host_sync_untainted_float_does_not_fire():
+    fs = lint(STRICT, """\
+        def f(tol):
+            return float(tol) * 2
+        """)
+    assert rules_of(fs, "host-sync") == []
+
+
+def test_host_sync_np_asarray_fires_only_in_strict_scope():
+    src = """\
+        import numpy as np
+        import jax.numpy as jnp
+        def f(x):
+            return np.asarray(jnp.sum(x))
+        """
+    assert len(rules_of(lint(STRICT, src), "host-sync")) == 1
+    # orchestration code fetches explicitly by design: allowed
+    assert rules_of(lint(ORCH, src), "host-sync") == []
+
+
+def test_host_sync_device_get_clears_taint():
+    fs = lint(ORCH, """\
+        import jax, jax.numpy as jnp
+        def f(x):
+            m = jax.device_get(jnp.sum(x))
+            return float(m)
+        """)
+    assert rules_of(fs, "host-sync") == []
+
+
+def test_host_sync_tolist_and_item_fire_in_orch():
+    fs = lint(ORCH, """\
+        import jax.numpy as jnp
+        def f(x):
+            z = jnp.cumsum(x)
+            return z.tolist(), z.item()
+        """)
+    assert len(rules_of(fs, "host-sync")) == 2
+
+
+def test_host_sync_jitted_callable_results_are_tainted():
+    fs = lint(ORCH, """\
+        import jax
+        step = jax.jit(lambda s: s)
+        def f(s):
+            step_fn = jax.jit(step)
+            out = step_fn(s)
+            return float(out)
+        """)
+    assert len(rules_of(fs, "host-sync")) == 1
+
+
+def test_host_sync_iterating_device_array_fires_but_range_is_fine():
+    fs = lint(ORCH, """\
+        import jax.numpy as jnp
+        def f(x):
+            z = jnp.sort(x)
+            for v in z:
+                pass
+            for i in range(int(x.shape[0])):
+                pass
+        """)
+    assert len(rules_of(fs, "host-sync")) == 1
+    assert "iterating" in fs[0].message
+
+
+def test_host_sync_partial_block_listcomp_fires():
+    fs = lint(ORCH, """\
+        def loop(fn, xs, n):
+            outs = [fn(xs[i]) for i in range(n)]
+            return outs[-1]
+        """)
+    assert len(rules_of(fs, "host-sync")) == 1
+    assert "partial block" in fs[0].message
+
+
+def test_host_sync_partial_block_full_list_return_is_fine():
+    fs = lint(ORCH, """\
+        def loop(fn, xs, n):
+            return [fn(xs[i]) for i in range(n)]
+        """)
+    assert rules_of(fs, "host-sync") == []
+
+
+def test_host_sync_loop_overwrite_return_fires():
+    fs = lint(ORCH, """\
+        def loop(fn, n):
+            out = None
+            for i in range(n):
+                out = fn(i)
+            return out
+        """)
+    assert len(rules_of(fs, "host-sync")) == 1
+    assert "overwritten" in fs[0].message
+
+
+def test_host_sync_block_until_ready_fires_only_in_serve():
+    src = """\
+        import jax
+        def f(x):
+            jax.block_until_ready(x)
+        """
+    fs = lint("src/repro/serve/fixture.py", src)
+    assert len(rules_of(fs, "host-sync")) == 1
+    assert rules_of(lint(ORCH, src), "host-sync") == []
+
+
+def test_host_sync_out_of_scope_module_is_ignored():
+    fs = lint("src/repro/core/aca.py", """\
+        import jax.numpy as jnp
+        def f(x):
+            return float(jnp.sum(x))
+        """)
+    assert rules_of(fs, "host-sync") == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+
+def test_justified_suppression_drops_finding():
+    fs = lint(STRICT, """\
+        import numpy as np
+        def fetch(dev):
+            return np.asarray(dev)  # hlint: disable=host-sync -- documented lazy fetch
+        """)
+    assert fs == []
+
+
+def test_own_line_suppression_applies_to_next_line():
+    fs = lint(STRICT, """\
+        import numpy as np
+        def fetch(dev):
+            # hlint: disable=host-sync -- documented lazy fetch
+            return np.asarray(dev)
+        """)
+    assert fs == []
+
+
+def test_bare_suppression_is_rejected():
+    fs = lint(STRICT, """\
+        import numpy as np
+        def fetch(dev):
+            return np.asarray(dev)  # hlint: disable=host-sync
+        """)
+    assert len(fs) == 1 and fs[0].rule == "hlint-bare-suppression"
+    assert "no justification" in fs[0].message
+
+
+def test_suppression_for_other_rule_does_not_apply():
+    fs = lint(STRICT, """\
+        import numpy as np
+        def fetch(dev):
+            return np.asarray(dev)  # hlint: disable=jit-hygiene -- wrong rule
+        """)
+    assert len(rules_of(fs, "host-sync")) == 1
+
+
+def test_suppression_parsing_multiple_rules():
+    sups = framework.parse_suppressions(
+        ["x = 1  # hlint: disable=host-sync, jit-hygiene -- both documented"])
+    assert sups[0].rules == ("host-sync", "jit-hygiene")
+    assert sups[0].justification == "both documented"
+    assert not sups[0].own_line
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+FAKE_LOCK_PATH = "src/repro/serve/fake_locked.py"
+FAKE_REG = {
+    "full": {"_pending"},
+    "subscript": {"stats"},
+    "no_rebind": {"last_info"},
+    "locked_methods": {"_locked_helper"},
+}
+
+
+@pytest.fixture
+def lock_registry(monkeypatch):
+    monkeypatch.setitem(rules_lock.LOCK_REGISTRY, FAKE_LOCK_PATH, FAKE_REG)
+
+
+def test_lock_unlocked_access_fires(lock_registry):
+    fs = lint(FAKE_LOCK_PATH, """\
+        class R:
+            def peek(self):
+                return len(self._pending)
+        """)
+    assert len(rules_of(fs, "lock-discipline")) == 1
+
+
+def test_lock_guarded_access_under_lock_is_fine(lock_registry):
+    fs = lint(FAKE_LOCK_PATH, """\
+        class R:
+            def __init__(self):
+                self._pending = []
+            def peek(self):
+                with self._cv:
+                    return len(self._pending)
+            def _locked_helper(self):
+                return self._pending.pop()
+        """)
+    assert rules_of(fs, "lock-discipline") == []
+
+
+def test_lock_locked_method_called_outside_lock_fires(lock_registry):
+    fs = lint(FAKE_LOCK_PATH, """\
+        class R:
+            def bad(self):
+                return self._locked_helper()
+            def good(self):
+                with self._cv:
+                    return self._locked_helper()
+        """)
+    fs = rules_of(fs, "lock-discipline")
+    assert len(fs) == 1 and fs[0].qualname == "R.bad"
+
+
+def test_lock_rebind_fires_but_clear_is_fine(lock_registry):
+    fs = lint(FAKE_LOCK_PATH, """\
+        from collections import deque
+        class R:
+            def __init__(self):
+                self.last_info = deque()
+            def reset_bad(self):
+                self.last_info = deque()
+            def reset_good(self):
+                self.last_info.clear()
+        """)
+    fs = rules_of(fs, "lock-discipline")
+    assert len(fs) == 1 and "rebinding" in fs[0].message
+
+
+def test_lock_stats_subscript_mode(lock_registry):
+    fs = lint(FAKE_LOCK_PATH, """\
+        class R:
+            def bad(self):
+                return self.stats["launched"]
+            def good_pass_object(self):
+                return self.stats
+            def good_locked(self):
+                with self._cv:
+                    self.stats["launched"] += 1
+        """)
+    fs = rules_of(fs, "lock-discipline")
+    assert len(fs) == 1 and fs[0].qualname == "R.bad"
+
+
+def test_live_stats_subscript_outside_serve_fires():
+    fs = lint(ORCH, """\
+        def read(rt):
+            return rt.stats["launch_order"]
+        """)
+    assert len(rules_of(fs, "lock-discipline")) == 1
+    fs = lint(ORCH, """\
+        def read(rt):
+            return rt.stats()["launch_order"]
+        """)
+    assert rules_of(fs, "lock-discipline") == []
+
+
+# ---------------------------------------------------------------------------
+# kernel-contract
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_contract_clean_on_this_repo():
+    fs = rules_kernel_contract.kernel_contract_rule(framework.REPO_ROOT)
+    assert fs == [], [f.format() for f in fs]
+
+
+def test_kernel_contract_broken_package(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "kernels" / "broken_op"
+    pkg.mkdir(parents=True)
+    (pkg / "kernel.py").write_text("def broken_t(x):\n    return x\n")
+    (pkg / "ops.py").write_text(
+        "from .kernel import broken_t\n"
+        "def broken(x):\n    return broken_t(x)\n")
+    (tmp_path / "tests").mkdir()
+    fs = rules_kernel_contract.kernel_contract_rule(tmp_path)
+    msgs = " | ".join(f.message for f in fs)
+    assert "missing 'ref.py'" in msgs
+    assert "no *_ref fallback" in msgs
+    assert "no kernel-vs-ref test" in msgs
+
+
+def test_kernel_contract_fallback_without_budget_fires(tmp_path):
+    pkg = tmp_path / "src" / "repro" / "kernels" / "halfway"
+    pkg.mkdir(parents=True)
+    (pkg / "kernel.py").write_text("def halfway_t(x):\n    return x\n")
+    (pkg / "ref.py").write_text("def halfway_ref(x):\n    return x\n")
+    (pkg / "ops.py").write_text(
+        "from .kernel import halfway_t\n"
+        "from .ref import halfway_ref\n"
+        "def halfway(x):\n"
+        "    if x.shape[0] > 9:\n"
+        "        return halfway_ref(x)\n"
+        "    return halfway_t(x)\n")
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests" / "test_halfway.py").write_text("# halfway\n")
+    fs = rules_kernel_contract.kernel_contract_rule(tmp_path)
+    assert len(fs) == 1 and "VMEM_BUDGET" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# jit-hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_jit_local_lambda_fires_module_level_does_not():
+    fs = lint(ORCH, """\
+        import jax
+        top = jax.jit(lambda x: x * 2.0)
+        def run():
+            f = jax.jit(lambda x: x * 2.0)
+            return f
+        """)
+    fs = rules_of(fs, "jit-hygiene")
+    assert len(fs) == 1 and fs[0].qualname == "run"
+
+
+def test_jit_traced_branch_fires():
+    fs = lint(ORCH, """\
+        import jax
+        @jax.jit
+        def f(x):
+            if x > 0:
+                return x
+            return -x
+        """)
+    fs = rules_of(fs, "jit-hygiene")
+    assert len(fs) == 1 and "traced value" in fs[0].message
+
+
+def test_jit_static_argnames_branch_is_fine():
+    fs = lint(ORCH, """\
+        import functools, jax
+        @functools.partial(jax.jit, static_argnames=("mode",))
+        def f(x, mode):
+            if mode:
+                return x
+            return -x
+        """)
+    assert rules_of(fs, "jit-hygiene") == []
+
+
+def test_jit_shape_branch_is_fine():
+    fs = lint(ORCH, """\
+        import jax
+        @jax.jit
+        def f(x):
+            if x.shape[0] > 4:
+                return x[:4]
+            return x
+        """)
+    assert rules_of(fs, "jit-hygiene") == []
+
+
+def test_jit_mutable_default_fires():
+    fs = lint(ORCH, """\
+        import jax
+        @jax.jit
+        def f(x, opts={}):
+            return x
+        """)
+    fs = rules_of(fs, "jit-hygiene")
+    assert len(fs) == 1 and "mutable default" in fs[0].message
+
+
+def test_jit_static_mutable_default_fires_as_unhashable():
+    fs = lint(ORCH, """\
+        import functools, jax
+        @functools.partial(jax.jit, static_argnames=("opts",))
+        def f(x, opts=()):
+            return x
+        @functools.partial(jax.jit, static_argnames=("opts2",))
+        def g(x, opts2=[]):
+            return x
+        """)
+    fs = rules_of(fs, "jit-hygiene")
+    assert len(fs) == 1 and "unhashable" in fs[0].message
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def test_baseline_round_trip_and_reconcile(tmp_path):
+    f1 = framework.Finding("host-sync", "a.py", 3, "f", "msg one")
+    f2 = framework.Finding("host-sync", "a.py", 9, "g", "msg two")
+    entries = [{"rule": "host-sync", "path": "a.py", "qualname": "f",
+                "message": "msg one", "justification": "documented"},
+               {"rule": "host-sync", "path": "a.py", "qualname": "gone",
+                "message": "fixed ages ago", "justification": "old"}]
+    path = tmp_path / "baseline.json"
+    framework.save_baseline(entries, path)
+    loaded = framework.load_baseline(path)
+    assert loaded == json.loads(path.read_text()) == sorted(
+        entries, key=lambda e: 0)  # order preserved
+    new, matched, stale, unjust = framework.reconcile([f1, f2], loaded)
+    assert [f.qualname for f in new] == ["g"]        # f2 not baselined
+    assert [e["qualname"] for e in matched] == ["f"]
+    assert [e["qualname"] for e in stale] == ["gone"]
+    assert unjust == []
+
+
+def test_baseline_line_numbers_do_not_matter():
+    f = framework.Finding("host-sync", "a.py", 999, "f", "msg one")
+    entry = {"rule": "host-sync", "path": "a.py", "qualname": "f",
+             "message": "msg one", "justification": "documented"}
+    new, matched, stale, _ = framework.reconcile([f], [entry])
+    assert new == [] and stale == [] and len(matched) == 1
+
+
+def test_baseline_todo_justification_is_rejected():
+    entry = {"rule": "r", "path": "p", "qualname": "q", "message": "m",
+             "justification": "TODO"}
+    *_, unjust = framework.reconcile([], [entry])
+    assert unjust == [entry]
+
+
+# ---------------------------------------------------------------------------
+# meta: the committed baseline matches a fresh run of this repo
+# ---------------------------------------------------------------------------
+
+
+def test_repo_is_hlint_clean_against_committed_baseline():
+    findings = framework.walk_repo(framework.REPO_ROOT)
+    baseline = framework.load_baseline()
+    new, matched, stale, unjust = framework.reconcile(findings, baseline)
+    assert new == [], "non-baselined findings:\n" + "\n".join(
+        f.format() for f in new)
+    assert stale == [], f"stale baseline entries: {stale}"
+    assert unjust == [], f"unjustified baseline entries: {unjust}"
+    # the baseline is tracked-not-ignored: every entry still matches a real
+    # finding, and none is justification-free
+    assert len(matched) == len(baseline) == 3

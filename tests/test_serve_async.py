@@ -143,10 +143,15 @@ def test_lazy_solveinfo_defers_fetch():
 # ---------------------------------------------------------------------------
 
 
+# jitted so the scalar is a baked-in constant: REPRO_STRICT_TRANSFERS wraps
+# every launch in jax.transfer_guard("disallow"), and eager `panel * 2.0`
+# would implicitly upload the Python float on each launch
+_double = jax.jit(lambda panel: panel * 2.0)
+
+
 def _echo_runtime(n=32, **kw):
     """Runtime over a trivial device launch (no H-matrix needed)."""
-    return PanelRuntime(n, kw.pop("max_batch", 8),
-                        lambda panel: panel * 2.0, **kw)
+    return PanelRuntime(n, kw.pop("max_batch", 8), _double, **kw)
 
 
 def test_deadline_flush_serves_short_panel():
@@ -168,7 +173,7 @@ def test_backpressure_caps_queue_depth():
     and every request still completes correctly."""
     def slow_launch(panel):
         time.sleep(0.03)
-        return panel * 2.0
+        return _double(panel)
 
     rt = PanelRuntime(32, 2, slow_launch, max_queue=4)
     vecs = [np.full(32, j, np.float32) for j in range(20)]

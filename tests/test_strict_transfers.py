@@ -1,0 +1,89 @@
+"""REPRO_STRICT_TRANSFERS runtime enforcement (the hlint host-sync rule's
+runtime twin): under the flag, the scheduler's launch hot path runs inside
+``jax.transfer_guard(.. "disallow")`` for both host directions, so a launch
+closure that performs an implicit host transfer RAISES instead of silently
+serializing the pipeline — and the error surfaces at ``future.result()``,
+not in the scheduler thread.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.serve.runtime import PanelRuntime, _strict_transfer_guard
+from repro.serve.step import _serve_in_panels
+from repro.serve.tenancy import MultiTenantRuntime, TenantSpec
+
+_double = jax.jit(lambda panel: panel * 2.0)
+
+
+def _eager_scale(panel):
+    # implicit host->device transfer per launch: the Python scalar 2.0 is
+    # uploaded by the eager op (exactly what the guard exists to catch)
+    return panel * 2.0
+
+
+def test_guard_is_nullcontext_when_flag_unset(monkeypatch):
+    monkeypatch.delenv("REPRO_STRICT_TRANSFERS", raising=False)
+    with _strict_transfer_guard():
+        dev = jax.device_put(np.ones(4, np.float32))
+        assert float(dev.sum()) == 4.0          # implicit syncs allowed
+
+
+def test_clean_launch_passes_under_strict_flag(monkeypatch):
+    monkeypatch.setenv("REPRO_STRICT_TRANSFERS", "1")
+    vecs = [np.full(16, j, np.float32) for j in range(6)]
+    with PanelRuntime(16, 4, _double) as rt:
+        futures = [rt.submit(v) for v in vecs]
+        rt.flush()
+        outs = [f.result(timeout=60) for f in futures]
+    for j in range(6):
+        np.testing.assert_array_equal(outs[j], vecs[j] * 2.0)
+
+
+def test_implicit_transfer_in_launch_raises_at_future(monkeypatch):
+    monkeypatch.setenv("REPRO_STRICT_TRANSFERS", "1")
+    rt = PanelRuntime(16, 4, _eager_scale)
+    fut = rt.submit(np.ones(16, np.float32))
+    rt.flush()
+    with pytest.raises(Exception, match="[Dd]isallowed"):
+        fut.result(timeout=60)
+    rt.close()
+
+
+def test_same_launch_passes_without_flag(monkeypatch):
+    monkeypatch.delenv("REPRO_STRICT_TRANSFERS", raising=False)
+    with PanelRuntime(16, 4, _eager_scale) as rt:
+        fut = rt.submit(np.ones(16, np.float32))
+        rt.flush()
+        np.testing.assert_array_equal(fut.result(timeout=60),
+                                      np.full(16, 2.0))
+
+
+def test_tenant_implicit_transfer_raises_only_for_that_tenant(monkeypatch):
+    monkeypatch.setenv("REPRO_STRICT_TRANSFERS", "1")
+    with MultiTenantRuntime() as mtr:
+        good = mtr.add_tenant("good", TenantSpec(16, 4, _double))
+        bad = mtr.add_tenant("bad", TenantSpec(16, 4, _eager_scale))
+        gf = good.submit(np.ones(16, np.float32))
+        bf = bad.submit(np.ones(16, np.float32))
+        mtr.flush()
+        np.testing.assert_array_equal(gf.result(timeout=60),
+                                      np.full(16, 2.0))
+        with pytest.raises(Exception, match="[Dd]isallowed"):
+            bf.result(timeout=60)
+
+
+def test_sync_async_bit_identity_under_strict_flag(monkeypatch):
+    """The guard changes WHEN work may transfer, never WHAT is computed:
+    the sync reference loop and the async runtime still produce
+    bit-identical panels under the flag."""
+    monkeypatch.setenv("REPRO_STRICT_TRANSFERS", "1")
+    vecs = [np.random.RandomState(3).randn(16).astype(np.float32)
+            for _ in range(7)]                      # ragged: 2 panels
+    sync_outs = _serve_in_panels(vecs, 16, 4, _double, widths=(1, 2, 4))
+    with PanelRuntime(16, 4, _double) as rt:
+        futures = [rt.submit(v) for v in vecs]
+        rt.flush()
+        async_outs = [f.result(timeout=60) for f in futures]
+    for s, a in zip(sync_outs, async_outs):
+        np.testing.assert_array_equal(s, a)

@@ -44,8 +44,15 @@ def _system(n, r, seed=0):
     return hm, F
 
 
+# launch callables must be device-resident (REPRO_STRICT_TRANSFERS wraps
+# every launch in jax.transfer_guard("disallow")): jit bakes the scalar in
+# as a constant, while eager `panel * 2.0` uploads it implicitly per launch
+_double = jax.jit(lambda panel: panel * 2.0)
+_plus_one = jax.jit(lambda panel: panel + 1.0)
+
+
 def _echo(scale):
-    return lambda panel: panel * scale
+    return jax.jit(lambda panel: panel * scale)
 
 
 def _echo_spec(n=16, max_batch=4, scale=2.0, **kw):
@@ -128,7 +135,7 @@ def test_skewed_load_light_tenant_not_starved():
     is bounded by a few panel times — not by the heavy backlog."""
     def slow_launch(panel):
         time.sleep(0.005)               # fixed panel cost: fairness visible
-        return panel * 2.0
+        return _double(panel)
 
     with MultiTenantRuntime(max_inflight=2) as mtr:
         heavy = mtr.add_tenant("heavy", TenantSpec(16, 4, slow_launch))
@@ -218,7 +225,7 @@ def test_remove_tenant_mid_traffic_drains_cleanly():
     handle raise."""
     def slow_launch(panel):
         time.sleep(0.003)
-        return panel * 2.0
+        return _double(panel)
 
     with MultiTenantRuntime() as mtr:
         keep = mtr.add_tenant("keep", TenantSpec(16, 4, slow_launch))
@@ -293,7 +300,7 @@ def test_per_tenant_backpressure_isolated():
     other tenant keeps an unbounded queue; every request still completes."""
     def slow_launch(panel):
         time.sleep(0.02)
-        return panel * 2.0
+        return _double(panel)
 
     with MultiTenantRuntime() as mtr:
         capped = mtr.add_tenant("capped",
@@ -483,7 +490,7 @@ def test_concurrent_submitters_two_tenants_no_lost_futures():
 def test_concurrent_submitters_single_runtime():
     """Satellite: multiple host threads into ONE PanelRuntime — no lost
     futures, every submitter's results correct, backpressure sane."""
-    rt = PanelRuntime(8, 4, lambda p: p + 1.0, max_queue=16)
+    rt = PanelRuntime(8, 4, _plus_one, max_queue=16)
     results = {}
 
     def producer(tid):
