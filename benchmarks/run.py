@@ -25,7 +25,7 @@ import sys
 import time
 import traceback
 
-from . import (bench_batching, bench_compare, bench_complexity,
+from . import (bench_batching, bench_chaos, bench_compare, bench_complexity,
                bench_convergence, bench_matmat, bench_roofline, bench_serve,
                bench_shard, bench_solve, bench_tenancy)
 
@@ -43,6 +43,7 @@ def _suites(args) -> list:
             ("shard", lambda: bench_shard.run(n=512, r=8)),
             ("serve", lambda: bench_serve.run(smoke=True)),
             ("tenancy", lambda: bench_tenancy.run(smoke=True)),
+            ("chaos", lambda: bench_chaos.run(smoke=True)),
             ("fig16-17", lambda: bench_compare.run(n=1024)),
             ("roofline", lambda: bench_roofline.run()),
         ]
@@ -60,6 +61,8 @@ def _suites(args) -> list:
          else bench_serve.run()),
         ("tenancy", lambda: bench_tenancy.run(smoke=True) if args.quick
          else bench_tenancy.run()),
+        ("chaos", lambda: bench_chaos.run(smoke=True) if args.quick
+         else bench_chaos.run()),
         ("fig16-17", lambda: bench_compare.run(n=4096 if args.quick else 8192)),
         ("roofline", lambda: bench_roofline.run()),
     ]

@@ -39,29 +39,60 @@ LOCK_ATTR = "_cv"
 LOCK_REGISTRY = {
     "src/repro/serve/runtime.py": {
         "full": {"_pending", "_flush_goal", "_launched", "_submitted",
-                 "_in_launch", "_closing", "_closed", "_thread"},
+                 "_in_launch", "_closing", "_closed", "_thread",
+                 # resilience state machine (LaneResilience/CircuitBreaker):
+                 # consulted by both the submit and scheduler threads
+                 "_res"},
         "subscript": {"stats"},
         "no_rebind": set(),
-        "locked_methods": {"_check_open", "_next_deadline", "_ensure_thread"},
+        "locked_methods": {"_check_open", "_next_deadline", "_ensure_thread",
+                           "_check_admission", "_sync_breaker_stat",
+                           "_event", "_launchable", "_handle_failure",
+                           # LaneResilience methods (caller-holds-lock
+                           # contract; attr-name match on any receiver)
+                           "gate", "allow_submit", "on_success",
+                           "decide_failure", "breaker_state"},
+        # _count_fallback is NOT a locked method: it runs on the FETCHING
+        # client thread (NaNGuard callback) and takes the lock itself.
     },
     "src/repro/serve/tenancy.py": {
         "full": {"_tenants", "_compiled", "_launch_seq", "_closing",
-                 "_closed", "_thread",
+                 "_closed", "_thread", "_monitor",
                  # _Tenant fields (attr-name match on any receiver)
                  "pending", "submitted", "launched", "flush_goal",
                  "in_launch", "deficit", "last_served", "removing",
-                 "weight"},
+                 "weight", "res"},
         "subscript": {"stats"},
         "no_rebind": set(),
         "locked_methods": {"drained", "_check_open", "_check_submittable",
-                           "_select", "_ready", "_next_deadline", "_pick",
-                           "_ensure_thread_locked"},
+                           "_select", "_ready", "_next_wake", "_pick",
+                           "_ensure_thread_locked", "_check_admission",
+                           "_tenant_event", "_handle_failure",
+                           # LaneResilience + StragglerMonitor methods
+                           # (caller-holds-lock contract)
+                           "gate", "allow_submit", "on_success",
+                           "decide_failure", "breaker_state",
+                           "record", "forget", "stragglers"},
+        # _make_on_fallback/_make_on_retire are factories whose CLOSURES
+        # take the lock themselves (they fire on fetch/pacer paths).
     },
     "src/repro/serve/step.py": {
         "full": set(),
         "subscript": set(),
         "no_rebind": {"last_info"},
         "locked_methods": set(),
+    },
+    "src/repro/serve/faults.py": {
+        # LaneResilience/CircuitBreaker mutable state: every method's
+        # contract is "caller holds the owning runtime's _cv" — the submit
+        # thread (admission checks) and the scheduler thread (failure
+        # verdicts) both touch these fields.
+        "full": {"attempts", "not_before", "failures", "opened_at", "state"},
+        "subscript": set(),
+        "no_rebind": set(),
+        "locked_methods": {"gate", "allow_submit", "on_success",
+                           "decide_failure", "breaker_state",
+                           "on_panel_success", "on_panel_failure"},
     },
 }
 

@@ -4,7 +4,21 @@
 """Shared kernel-package helpers."""
 from __future__ import annotations
 
+import os
+
 import jax
+
+
+def force_ref() -> bool:
+    """Degraded-mode switch: ``REPRO_FORCE_REF=1`` routes every kernel
+    dispatcher to its jnp reference path.
+
+    The resilience layer's last-resort knob: if Pallas kernels themselves
+    are suspected (miscompiles, NaN-producing lowering bugs), an operator
+    can flip the whole fleet to the slower-but-trusted oracle without a
+    code change.  Read per call so tests can monkeypatch the environment.
+    """
+    return os.environ.get("REPRO_FORCE_REF", "0") not in ("", "0")
 
 
 def default_interpret() -> bool:

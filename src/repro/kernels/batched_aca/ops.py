@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import force_ref
+
 from .kernel import batched_aca_t, batched_lowrank_matmat_t
 from .ref import batched_aca_ref, batched_lowrank_matmat_ref
 
@@ -51,7 +53,7 @@ def batched_aca_pallas(rows: jnp.ndarray, cols: jnp.ndarray,
     """
     b, m, d = rows.shape
     n = cols.shape[1]
-    if _vmem_bytes(m, n, d, k) > VMEM_BUDGET:
+    if force_ref() or _vmem_bytes(m, n, d, k) > VMEM_BUDGET:
         return batched_aca_ref(rows, cols, kernel_name, k)
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)
@@ -80,6 +82,6 @@ def batched_lowrank_matmat(u: jnp.ndarray, v: jnp.ndarray,
     b, m, k = u.shape
     n = v.shape[1]
     r = x.shape[2]
-    if _lowrank_vmem_bytes(m, n, k, r) > VMEM_BUDGET:
+    if force_ref() or _lowrank_vmem_bytes(m, n, k, r) > VMEM_BUDGET:
         return batched_lowrank_matmat_ref(u, v, x)
     return batched_lowrank_matmat_t(u, v, x)

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import force_ref
+
 from .kernel import batched_block_cholesky_solve_t, batched_block_cholesky_t
 from .ref import batched_block_cholesky_ref, batched_block_cholesky_solve_ref
 
@@ -40,7 +42,7 @@ def batched_block_cholesky(a: jnp.ndarray) -> jnp.ndarray:
         program).  Oversized blocks fall back to the jnp oracle.
     """
     c = a.shape[1]
-    if _chol_vmem_bytes(c) > VMEM_BUDGET:
+    if force_ref() or _chol_vmem_bytes(c) > VMEM_BUDGET:
         return batched_block_cholesky_ref(a)
     return batched_block_cholesky_t(a)
 
@@ -62,6 +64,6 @@ def batched_block_cholesky_solve(l: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     """
     c = l.shape[1]
     r = x.shape[2]
-    if _solve_vmem_bytes(c, r) > VMEM_BUDGET:
+    if force_ref() or _solve_vmem_bytes(c, r) > VMEM_BUDGET:
         return batched_block_cholesky_solve_ref(l, x)
     return batched_block_cholesky_solve_t(l, x)

@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels import force_ref
+
 from .kernel import batched_kernel_matmat_t, batched_kernel_matvec_t
 from .ref import batched_kernel_matmat_ref, batched_kernel_matvec_ref
 
@@ -43,7 +45,7 @@ def batched_kernel_matvec(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
         exceeds ``VMEM_BUDGET`` fall back to the jnp reference path.
     """
     _, c, d = rows.shape
-    if _vmem_bytes(c, d) > VMEM_BUDGET:
+    if force_ref() or _vmem_bytes(c, d) > VMEM_BUDGET:
         return batched_kernel_matvec_ref(rows, cols, x, kernel_name)
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)
@@ -72,7 +74,7 @@ def batched_kernel_matmat(rows: jnp.ndarray, cols: jnp.ndarray, x: jnp.ndarray,
         jnp reference path.
     """
     _, c, d = rows.shape
-    if _vmem_bytes(c, d, x.shape[2]) > VMEM_BUDGET:
+    if force_ref() or _vmem_bytes(c, d, x.shape[2]) > VMEM_BUDGET:
         return batched_kernel_matmat_ref(rows, cols, x, kernel_name)
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)

@@ -20,8 +20,8 @@ import numpy as np
 from repro.configs.registry import get_arch, get_smoke, list_archs
 from repro.data.pipeline import DataConfig, make_batch
 from repro.runtime.checkpoint import CheckpointManager
-from repro.runtime.fault_tolerance import (PreemptionHandler, StragglerMonitor,
-                                           run_with_restarts)
+from repro.runtime.fault_tolerance import PreemptionHandler
+from repro.serve.faults import StragglerMonitor, run_with_restarts
 from repro.train.optimizer import AdamWConfig
 from repro.train.step import make_train_step
 

@@ -101,8 +101,8 @@ class CheckpointManager:
         """Restore into the structure of ``state_like`` (arrays or structs).
 
         ``shardings``: optional pytree of NamedSharding — leaves are placed
-        directly to their devices (this is also the elastic re-shard path:
-        pass the NEW mesh's shardings).
+        directly to their devices (pass a NEW mesh's shardings to re-shard
+        on restore).
         """
         step = step if step is not None else self.latest_step()
         if step is None:

@@ -1,58 +1,18 @@
-"""Fault-tolerance runtime: restart-on-failure, preemption, straggler watch.
+"""Training-side fault tolerance: preemption-aware checkpoint-and-exit.
 
-Designed for the 1000+ node posture:
-  * every step is restartable from the last committed checkpoint — the data
-    pipeline is step-seeded (repro.data.pipeline) so restore is exact;
-  * SIGTERM (preemption notice) triggers a final synchronous checkpoint;
-  * per-host heartbeats + EWMA step-time tracking flag stragglers; the
-    mitigation hook can trigger elastic shrink (runtime.elastic) or node
-    replacement — in this single-host container the signals are injected by
-    tests, the policy logic is what is exercised.
+Only :class:`PreemptionHandler` lives here now.  The rest of the original
+module moved to where it is actually wired:
+
+* ``StragglerMonitor`` and ``run_with_restarts`` -> ``repro.serve.faults``
+  (the serving resilience layer feeds the monitor per-tenant launch
+  latencies; the training launcher imports both from there);
+* ``HeartbeatTracker`` and ``runtime/elastic.py`` were deleted — nothing
+  in the tree used them (dead seed code; resurrect from git history if a
+  multi-host deployment ever needs host liveness or elastic resharding).
 """
 from __future__ import annotations
 
 import signal
-import time
-from dataclasses import dataclass, field
-
-
-@dataclass
-class StragglerMonitor:
-    """EWMA step-time outlier detection per host."""
-    alpha: float = 0.1
-    threshold: float = 2.0          # x slower than fleet EWMA -> straggler
-    ewma: dict = field(default_factory=dict)
-    fleet_ewma: float | None = None
-
-    def record(self, host: str, step_time: float) -> bool:
-        """Record one step time; returns True if host is now a straggler."""
-        prev = self.ewma.get(host)
-        self.ewma[host] = step_time if prev is None else \
-            (1 - self.alpha) * prev + self.alpha * step_time
-        fleet = sorted(self.ewma.values())
-        median = fleet[len(fleet) // 2]
-        self.fleet_ewma = median
-        return self.ewma[host] > self.threshold * median
-
-    def stragglers(self) -> list[str]:
-        if not self.ewma or self.fleet_ewma is None:
-            return []
-        return [h for h, v in self.ewma.items()
-                if v > self.threshold * self.fleet_ewma]
-
-
-@dataclass
-class HeartbeatTracker:
-    """Host liveness from heartbeat timestamps (multi-host: a kv-store)."""
-    timeout: float = 60.0
-    last_seen: dict = field(default_factory=dict)
-
-    def beat(self, host: str, now: float | None = None):
-        self.last_seen[host] = time.time() if now is None else now
-
-    def dead_hosts(self, now: float | None = None) -> list[str]:
-        now = time.time() if now is None else now
-        return [h for h, t in self.last_seen.items() if now - t > self.timeout]
 
 
 class PreemptionHandler:
@@ -71,21 +31,3 @@ class PreemptionHandler:
     def uninstall(self):
         if self._orig is not None:
             signal.signal(signal.SIGTERM, self._orig)
-
-
-def run_with_restarts(make_loop, max_restarts: int = 3, on_restart=None):
-    """Supervisor: re-invokes ``make_loop()`` after recoverable failures.
-
-    ``make_loop`` must restore from the latest checkpoint on entry (see
-    examples/train_lm.py); returns its result when it completes.
-    """
-    attempt = 0
-    while True:
-        try:
-            return make_loop()
-        except (RuntimeError, OSError) as e:        # recoverable class
-            attempt += 1
-            if attempt > max_restarts:
-                raise
-            if on_restart is not None:
-                on_restart(attempt, e)

@@ -1,0 +1,508 @@
+"""Fault injection + failure containment for the serving stack.
+
+The serving runtimes (``serve.runtime.PanelRuntime``, ``serve.tenancy.
+MultiTenantRuntime``) batch many users' requests into few wide launches —
+which concentrates blast radius: one failed launch used to poison every
+co-batched future with no retry, no isolation, and no degraded path.  This
+module is the resilience layer that closes that gap, in two halves:
+
+**Chaos harness** (the test/ops half).  :class:`FaultInjector` wraps any
+launch callable and injects faults from a deterministic, seedable schedule
+described by a :class:`ChaosSpec`:
+
+* ``error=RATE``            — raised launch errors (permanent class);
+* ``transient=RATE[:K]``    — raised errors that keep failing for ``K``
+  consecutive attempts of that lane, then recover (the retryable class);
+* ``nan=RATE``              — NaN-poisoned outputs (the launch *succeeds*,
+  the panel is garbage — caught by output validation);
+* ``latency=RATE[:SECONDS]``— injected stragglers (the launch sleeps);
+* ``seed=INT``              — the schedule seed.  Every lane derives its
+  own stream from ``seed`` + its name, so schedules are reproducible and
+  independent of *other* lanes' traffic.
+
+``REPRO_CHAOS=<spec>`` is the env twin (mirroring
+``REPRO_STRICT_TRANSFERS``): when set, every runtime constructed without
+an explicit ``chaos=`` argument injects per that spec — which is how CI
+runs the whole serving test suite under fault load without editing a test.
+
+**Containment policies** (the production half).  :class:`ResiliencePolicy`
+bundles what a runtime does when a launch fails:
+
+* :class:`RetryPolicy`   — per-panel retry with exponential backoff +
+  jitter, bounded attempts.  A retried panel RE-ENTERS the pacing FIFO at
+  the front of its queue; it never bypasses the pacer (the staging-buffer
+  aliasing guarantee is pacing-order, not success-order).
+* :class:`BreakerPolicy` — per-lane circuit breaker: after ``threshold``
+  consecutive panel failures the lane is quarantined (queued futures fail
+  fast, new submits raise :class:`CircuitOpenError`), and after
+  ``cooldown_s`` a half-open probe panel decides reclose vs reopen.
+* ``launch_deadline_s``  — straggler detection: a launch whose dispatch
+  exceeds the deadline is counted in ``stats()["slow_launches"]``.
+* ``validate_outputs``   — NaN/Inf output validation at fetch time with a
+  one-shot fallback relaunch of the affected panel through the runtime's
+  reference path (:class:`NaNGuard`).
+
+The mutable per-lane state machine lives in :class:`LaneResilience` /
+:class:`CircuitBreaker`; every mutating method's contract is "caller holds
+the runtime lock" (enforced by hlint's lock-discipline registry).
+:class:`StragglerMonitor` and :func:`run_with_restarts` moved here from
+``runtime.fault_tolerance`` — the serving layer is what wires them now.
+
+See ``docs/RESILIENCE.md`` for the full fault model and spec grammar.
+"""
+from __future__ import annotations
+
+import os
+import random
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# -- error taxonomy ----------------------------------------------------------
+
+class InjectedFault(RuntimeError):
+    """Raised by the chaos harness in place of a real launch failure."""
+
+
+class TransientInjectedFault(InjectedFault):
+    """An injected launch failure that recovers after bounded re-attempts."""
+
+
+class CircuitOpenError(RuntimeError):
+    """The lane's circuit breaker is open: submits fail fast until the
+    cooldown elapses and a half-open probe panel succeeds."""
+
+
+class OverloadedError(RuntimeError):
+    """Load shedding: the queue is beyond its admission budget; the request
+    was rejected instead of blocking unboundedly."""
+
+
+class NaNPanelError(RuntimeError):
+    """A launched panel produced NaN/Inf output and no reference fallback
+    was available (or the fallback was non-finite too)."""
+
+
+# -- chaos spec + env twin ---------------------------------------------------
+
+@dataclass(frozen=True)
+class ChaosSpec:
+    """Parsed fault-injection schedule (see module docstring for grammar)."""
+
+    error_rate: float = 0.0
+    transient_rate: float = 0.0
+    transient_fails: int = 1        # consecutive failing attempts per hit
+    nan_rate: float = 0.0
+    latency_rate: float = 0.0
+    latency_s: float = 0.01
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in ("error_rate", "transient_rate", "nan_rate",
+                     "latency_rate"):
+            r = getattr(self, name)
+            if not 0.0 <= r <= 1.0:
+                raise ValueError(f"chaos {name} must be in [0, 1], got {r}")
+        total = (self.error_rate + self.transient_rate + self.nan_rate
+                 + self.latency_rate)
+        if total > 1.0:
+            raise ValueError(f"chaos rates sum to {total} > 1 — the kinds "
+                             f"partition one uniform draw per launch")
+        if self.transient_fails < 1:
+            raise ValueError(f"transient fail count must be >= 1, got "
+                             f"{self.transient_fails}")
+        if self.latency_s < 0:
+            raise ValueError(f"injected latency must be >= 0, got "
+                             f"{self.latency_s}")
+
+    @staticmethod
+    def parse(spec: str) -> "ChaosSpec":
+        """Parse ``"error=0.05,transient=0.1:2,nan=0.01,latency=0.05:0.2,
+        seed=42"`` — comma-separated ``key=value`` fields, any subset."""
+        kw: dict = {}
+        for item in spec.split(","):
+            item = item.strip()
+            if not item:
+                continue
+            key, _, val = item.partition("=")
+            if not _:
+                raise ValueError(f"bad chaos field {item!r}: expected "
+                                 f"key=value")
+            key, val = key.strip(), val.strip()
+            try:
+                if key == "error":
+                    kw["error_rate"] = float(val)
+                elif key == "transient":
+                    rate, _, fails = val.partition(":")
+                    kw["transient_rate"] = float(rate)
+                    if fails:
+                        kw["transient_fails"] = int(fails)
+                elif key == "nan":
+                    kw["nan_rate"] = float(val)
+                elif key == "latency":
+                    rate, _, secs = val.partition(":")
+                    kw["latency_rate"] = float(rate)
+                    if secs:
+                        kw["latency_s"] = float(secs)
+                elif key == "seed":
+                    kw["seed"] = int(val)
+                else:
+                    raise ValueError(
+                        f"unknown chaos field {key!r} (known: error, "
+                        f"transient, nan, latency, seed)")
+            except ValueError as exc:
+                raise ValueError(f"bad chaos field {item!r}: {exc}") from None
+        return ChaosSpec(**kw)
+
+
+def chaos_from_env() -> ChaosSpec | None:
+    """The ``REPRO_CHAOS`` env twin: parsed spec, or ``None`` when unset or
+    empty.  Read per call so tests can flip the env var at runtime."""
+    raw = os.environ.get("REPRO_CHAOS", "")
+    return ChaosSpec.parse(raw) if raw.strip() else None
+
+
+def resolve_chaos(chaos) -> ChaosSpec | None:
+    """Normalize a runtime's ``chaos=`` argument.
+
+    ``None`` defers to the env twin; a string is parsed (empty string =
+    explicitly disabled, overriding the env); a :class:`ChaosSpec` passes
+    through.
+    """
+    if chaos is None:
+        return chaos_from_env()
+    if isinstance(chaos, str):
+        return ChaosSpec.parse(chaos) if chaos.strip() else None
+    if isinstance(chaos, ChaosSpec):
+        return chaos
+    raise TypeError(f"chaos must be None, a spec string, or a ChaosSpec, "
+                    f"got {type(chaos)!r}")
+
+
+# module-level jit (created once): poisoning must stay a DEVICE op — the
+# wrapped launch runs under the strict transfer guard, where an eager host
+# NaN fill would raise
+_poison_panel = jax.jit(lambda out: jnp.full_like(out, jnp.nan))
+
+
+def _lane_stream(seed: int, name: str) -> random.Random:
+    """Independent deterministic stream per (seed, lane name)."""
+    return random.Random((seed << 32) ^ zlib.crc32(name.encode()))
+
+
+class FaultInjector:
+    """Deterministic fault injector for ONE lane's launch callable.
+
+    Scheduler-thread only (like the lane it wraps), so it needs no lock.
+    One uniform draw per launch attempt decides the fault kind: the kinds
+    partition ``[0, 1)`` into disjoint rate bands, so a single seeded
+    stream yields a reproducible schedule — independent of other lanes,
+    dependent only on this lane's attempt order.
+
+    ``counters`` tallies injected faults per kind; runtimes copy it into
+    ``stats()["faults_injected"]`` under their lock after each launch.
+    """
+
+    def __init__(self, spec: ChaosSpec, name: str = "panel"):
+        self.spec = spec
+        self.name = name
+        self._rng = _lane_stream(spec.seed, name)
+        self._pending_fails = 0         # transient hit: attempts left to fail
+        self.counters = {"error": 0, "transient": 0, "nan": 0, "latency": 0}
+
+    def total(self) -> int:
+        return sum(self.counters.values())
+
+    def wrap(self, launch: Callable) -> Callable:
+        def chaotic_launch(panel):
+            spec = self.spec
+            if self._pending_fails > 0:
+                self._pending_fails -= 1
+                self.counters["transient"] += 1
+                raise TransientInjectedFault(
+                    f"injected transient launch failure on lane "
+                    f"{self.name!r} (recovers after "
+                    f"{self._pending_fails} more attempt(s))")
+            r = self._rng.random()
+            edge = spec.error_rate
+            if r < edge:
+                self.counters["error"] += 1
+                raise InjectedFault(
+                    f"injected permanent launch failure on lane "
+                    f"{self.name!r}")
+            if r < edge + spec.transient_rate:
+                self.counters["transient"] += 1
+                self._pending_fails = spec.transient_fails - 1
+                raise TransientInjectedFault(
+                    f"injected transient launch failure on lane "
+                    f"{self.name!r} (recovers after "
+                    f"{self._pending_fails} more attempt(s))")
+            edge += spec.transient_rate
+            poison = r < edge + spec.nan_rate
+            if poison:
+                self.counters["nan"] += 1
+            elif r < edge + spec.nan_rate + spec.latency_rate:
+                self.counters["latency"] += 1
+                time.sleep(spec.latency_s)
+            out = launch(panel)
+            return _poison_panel(out) if poison else out
+
+        return chaotic_launch
+
+
+# -- containment policies ----------------------------------------------------
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded per-panel retry with exponential backoff + jitter.
+
+    ``max_attempts`` counts TOTAL launch attempts (first try included);
+    attempt ``k`` failing schedules the next one after
+    ``backoff_s * backoff_mult**(k-1)`` scaled by up to ``+jitter``.
+    """
+
+    max_attempts: int = 4
+    backoff_s: float = 0.002
+    backoff_mult: float = 2.0
+    jitter: float = 0.5             # uniform fraction of the step added
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got "
+                             f"{self.max_attempts}")
+        if self.backoff_s < 0 or self.jitter < 0 or self.backoff_mult < 1:
+            raise ValueError("backoff_s/jitter must be >= 0 and "
+                             "backoff_mult >= 1")
+
+    def delay_s(self, attempt: int, rng: random.Random) -> float:
+        base = self.backoff_s * self.backoff_mult ** max(0, attempt - 1)
+        return base * (1.0 + self.jitter * rng.random())
+
+
+@dataclass(frozen=True)
+class BreakerPolicy:
+    """Per-lane circuit breaker: quarantine after ``threshold`` CONSECUTIVE
+    panel failures (retry-exhausted panels, not individual attempts); after
+    ``cooldown_s`` the next submit is admitted as a half-open probe."""
+
+    threshold: int = 5
+    cooldown_s: float = 0.25
+
+    def __post_init__(self):
+        if self.threshold < 1:
+            raise ValueError(f"breaker threshold must be >= 1, got "
+                             f"{self.threshold}")
+        if self.cooldown_s < 0:
+            raise ValueError(f"breaker cooldown must be >= 0, got "
+                             f"{self.cooldown_s}")
+
+
+@dataclass(frozen=True)
+class ResiliencePolicy:
+    """What a runtime does about failure — the containment bundle.
+
+    ``retry=None`` disables retries, ``breaker=None`` disables the
+    breaker; ``launch_deadline_s`` enables slow-launch accounting;
+    ``validate_outputs`` enables the NaN/Inf fetch-time guard (which
+    falls back to the runtime's reference launch when one is wired).
+    ``seed`` feeds the backoff jitter stream (deterministic tests).
+    """
+
+    retry: RetryPolicy | None = field(default_factory=RetryPolicy)
+    breaker: BreakerPolicy | None = field(default_factory=BreakerPolicy)
+    launch_deadline_s: float | None = None
+    validate_outputs: bool = True
+    seed: int = 0
+
+
+class CircuitBreaker:
+    """closed -> open -> half_open state machine for one lane.
+
+    Caller holds the owning runtime's lock for every method (hlint
+    lock-discipline: the fields race the submit path otherwise).
+    """
+
+    def __init__(self, policy: BreakerPolicy):
+        self.policy = policy
+        self.state = "closed"
+        self.failures = 0               # consecutive panel failures
+        self.opened_at = 0.0
+
+    def allow_submit(self, now: float) -> bool:
+        """Admission check; flips open -> half_open once cooled down (the
+        admitted request becomes the probe panel)."""
+        if self.state == "open" \
+                and now - self.opened_at >= self.policy.cooldown_s:
+            self.state = "half_open"
+        return self.state != "open"
+
+    def on_panel_success(self):
+        self.state = "closed"
+        self.failures = 0
+
+    def on_panel_failure(self, now: float) -> bool:
+        """Count one retry-exhausted panel; True if the breaker (re)opened."""
+        self.failures += 1
+        if self.state == "half_open" \
+                or self.failures >= self.policy.threshold:
+            self.state = "open"
+            self.opened_at = now
+            return True
+        return False
+
+
+class LaneResilience:
+    """Mutable retry/breaker state for one lane (tenant or single runtime).
+
+    All methods: caller holds the owning runtime's condition lock (the
+    scheduler and submit threads both consult this state).
+    """
+
+    def __init__(self, policy: ResiliencePolicy, name: str = "panel"):
+        self.policy = policy
+        self.breaker = (CircuitBreaker(policy.breaker)
+                        if policy.breaker is not None else None)
+        self._rng = _lane_stream(policy.seed, "backoff:" + name)
+        self.attempts = 0               # launch attempts for the head panel
+        self.not_before = 0.0           # backoff gate (monotonic time)
+
+    def gate(self, now: float) -> float | None:
+        """Monotonic wake time while backing off, else ``None`` (go)."""
+        return self.not_before if now < self.not_before else None
+
+    def breaker_state(self) -> str:
+        return self.breaker.state if self.breaker is not None else "disabled"
+
+    def allow_submit(self, now: float) -> bool:
+        return self.breaker is None or self.breaker.allow_submit(now)
+
+    def on_success(self):
+        self.attempts = 0
+        self.not_before = 0.0
+        if self.breaker is not None:
+            self.breaker.on_panel_success()
+
+    def decide_failure(self, now: float) -> str:
+        """One launch attempt failed.  Returns the scheduler's move:
+        ``'retry'`` (backoff gate set — requeue the panel), ``'fail'``
+        (retries exhausted — fail the panel's futures), or ``'open'``
+        (fail the panel AND quarantine the lane)."""
+        self.attempts += 1
+        probing = (self.breaker is not None
+                   and self.breaker.state == "half_open")
+        if (self.policy.retry is not None and not probing
+                and self.attempts < self.policy.retry.max_attempts):
+            self.not_before = now + self.policy.retry.delay_s(
+                self.attempts, self._rng)
+            return "retry"
+        self.attempts = 0
+        self.not_before = 0.0
+        opened = (self.breaker.on_panel_failure(now)
+                  if self.breaker is not None else False)
+        return "open" if opened else "fail"
+
+
+# -- degraded-mode output validation ----------------------------------------
+
+class NaNGuard:
+    """Fetch-time NaN/Inf containment for one launched panel.
+
+    Holds a HOST copy of the packed input panel (the device staging buffer
+    may alias host memory that is repacked after the pacer retires the
+    launch — a retained device reference would be unsafe, a host copy is
+    immutable).  ``check`` validates the real (non-pad) columns of the
+    fetched output; on NaN/Inf it relaunches the saved panel ONCE through
+    the reference fallback on the fetching thread.  Runs under the panel
+    record's own lock — one validation + at most one fallback per panel,
+    shared by all its column futures.
+    """
+
+    __slots__ = ("panel", "n_real", "fallback", "on_fallback")
+
+    def __init__(self, panel: np.ndarray, n_real: int,
+                 fallback: Callable | None, on_fallback: Callable | None):
+        self.panel = panel
+        self.n_real = n_real
+        self.fallback = fallback
+        self.on_fallback = on_fallback
+
+    def check(self, out: np.ndarray) -> np.ndarray:
+        if np.isfinite(out[:, :self.n_real]).all():
+            return out
+        if self.fallback is None:
+            raise NaNPanelError(
+                "launched panel produced NaN/Inf output and no reference "
+                "fallback is wired — pass fallback= to the runtime (the "
+                "servers wire their use_pallas=False path automatically)")
+        if self.on_fallback is not None:
+            self.on_fallback()
+        # hlint: disable=host-sync -- degraded one-shot fallback on the FETCHING thread: the panel is already being fetched, this swaps in the reference result
+        redo = np.asarray(self.fallback(jnp.asarray(self.panel)))
+        if not np.isfinite(redo[:, :self.n_real]).all():
+            raise NaNPanelError(
+                "reference fallback still produced NaN/Inf output — the "
+                "panel inputs (validated finite at submit) hit a "
+                "numerically broken operator, not a kernel bug")
+        return redo
+
+
+# -- training-side utilities (folded in from runtime.fault_tolerance) -------
+
+class StragglerMonitor:
+    """EWMA launch/step-time outlier detection per lane (or host).
+
+    ``record`` folds one observation into the lane's EWMA and compares it
+    to the fleet median; ``threshold`` x slower flags a straggler.  Used
+    by ``MultiTenantRuntime`` (per-tenant launch latency, fed at pacer
+    retirement under the runtime lock) and by the training launcher
+    (per-host step times).
+    """
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: dict = {}
+        self.fleet_ewma: float | None = None
+
+    def record(self, lane: str, seconds: float) -> bool:
+        """Record one observation; True if ``lane`` is now a straggler."""
+        prev = self.ewma.get(lane)
+        self.ewma[lane] = seconds if prev is None else \
+            (1 - self.alpha) * prev + self.alpha * seconds
+        fleet = sorted(self.ewma.values())
+        self.fleet_ewma = fleet[len(fleet) // 2]
+        return self.ewma[lane] > self.threshold * self.fleet_ewma
+
+    def stragglers(self) -> list:
+        if not self.ewma or self.fleet_ewma is None:
+            return []
+        return [lane for lane, v in self.ewma.items()
+                if v > self.threshold * self.fleet_ewma]
+
+    def forget(self, lane: str):
+        """Drop a lane's history (e.g. its tenant was removed)."""
+        self.ewma.pop(lane, None)
+
+
+def run_with_restarts(make_loop, max_restarts: int = 3, on_restart=None):
+    """Supervisor: re-invokes ``make_loop()`` after recoverable failures.
+
+    ``make_loop`` must restore from the latest checkpoint on entry (see
+    examples/train_lm.py); returns its result when it completes.
+    """
+    attempt = 0
+    while True:
+        try:
+            return make_loop()
+        except (RuntimeError, OSError) as e:        # recoverable class
+            attempt += 1
+            if attempt > max_restarts:
+                raise
+            if on_restart is not None:
+                on_restart(attempt, e)

@@ -73,6 +73,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve.faults import (CircuitOpenError, FaultInjector, LaneResilience,
+                                NaNGuard, OverloadedError, ResiliencePolicy,
+                                resolve_chaos)
+
 
 def _strict_transfer_guard():
     """Disallow implicit host transfers when ``REPRO_STRICT_TRANSFERS=1``.
@@ -130,6 +134,32 @@ def width_for(count: int, widths: Sequence[int]) -> int:
     raise ValueError(f"{count} requests exceed the panel width {widths[-1]}")
 
 
+def validate_request(vec, n: int, who: str = "request") -> np.ndarray:
+    """Host-side payload validation at ``submit()`` time.
+
+    Invalid payloads (wrong shape/dtype, non-finite values) are rejected
+    HERE, on the submitting thread, with a clear error — not at launch,
+    where they would fail the whole packed panel and poison every
+    co-batched neighbor's future (the blast-radius bug).
+    """
+    if np.iscomplexobj(vec):
+        raise ValueError(f"{who}: complex payload rejected — the serving "
+                         f"panels are float32")
+    try:
+        # hlint: disable=host-sync -- client-side input normalization of host data on the submit thread; the h2d upload happens once per panel at launch
+        q = np.asarray(vec, dtype=np.float32)
+    except (TypeError, ValueError) as exc:
+        raise ValueError(f"{who}: payload not convertible to a float32 "
+                         f"vector ({exc})") from None
+    if q.shape != (n,):
+        raise ValueError(f"{who} shape {q.shape} != ({n},)")
+    if not np.isfinite(q).all():
+        raise ValueError(f"{who}: non-finite payload (NaN/Inf) rejected at "
+                         f"submit — it would poison every co-batched "
+                         f"request in its panel")
+    return q
+
+
 def _snapshot(value):
     """Deep-ish copy of a stats tree: dicts copied, deques become lists."""
     if isinstance(value, dict):
@@ -164,22 +194,38 @@ class _PanelRecord:
 
     Holds the device result of the launch; the first ``host()`` call does
     the single blocking ``np.asarray`` fetch and caches it for every other
-    column of the panel.
+    column of the panel.  With a :class:`~repro.serve.faults.NaNGuard`
+    attached, the fetched panel is validated (and on NaN/Inf relaunched
+    once through the reference fallback) before caching; a guard failure
+    is cached too, so every column future re-raises the same error without
+    re-running the fallback.
     """
 
-    __slots__ = ("_dev", "_host", "_lock")
+    __slots__ = ("_dev", "_host", "_lock", "_guard", "_exc")
 
-    def __init__(self, dev):
+    def __init__(self, dev, guard=None):
         self._dev = dev
         self._host = None
         self._lock = threading.Lock()
+        self._guard = guard
+        self._exc = None
 
     def host(self) -> np.ndarray:
         with self._lock:
+            if self._exc is not None:
+                raise self._exc
             if self._host is None:
                 # hlint: disable=host-sync -- THE documented lazy fetch: one blocking transfer per panel, cached for every column future
-                self._host = np.asarray(self._dev)
+                out = np.asarray(self._dev)
+                if self._guard is not None:
+                    try:
+                        out = self._guard.check(out)
+                    except Exception as exc:
+                        self._exc = exc
+                        raise
+                self._host = out
                 self._dev = None
+                self._guard = None
             return self._host
 
 
@@ -247,7 +293,7 @@ class LaunchPacer:
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.max_inflight = int(max_inflight)
-        self._inflight: list = []       # device results, launch (FIFO) order
+        self._inflight: list = []   # (dev, t_commit, on_retire), FIFO order
 
     def __len__(self) -> int:
         return len(self._inflight)
@@ -257,23 +303,32 @@ class LaunchPacer:
 
         While blocked, arrivals keep queueing, so the next panel packs
         wider under load (width adapts to overload instead of flooding the
-        device with narrow fixed-cost launches).
+        device with narrow fixed-cost launches).  Retirement invokes the
+        launch's ``on_retire(elapsed_s, ok)`` callback (straggler
+        accounting) — exceptions from it are contained, like device ones.
         """
         while len(self._inflight) >= self.max_inflight:
+            dev, t_commit, on_retire = self._inflight.pop(0)
+            ok = True
             try:
                 # hlint: disable=host-sync -- pacing backpressure by design: block on the OLDEST launch only when the inflight window is full
-                jax.block_until_ready(self._inflight.pop(0))
+                jax.block_until_ready(dev)
             except Exception:
                 # async dispatch defers device failures to the first
                 # block: the panel's awaiters hit the same error at
                 # their np.asarray fetch — do not let it kill the
                 # scheduler thread (pending requests would strand and
                 # close() would deadlock)
-                pass
+                ok = False
+            if on_retire is not None:
+                try:
+                    on_retire(time.monotonic() - t_commit, ok)
+                except Exception:
+                    pass                # accounting must not kill the scheduler
 
-    def commit(self, dev):
+    def commit(self, dev, on_retire=None):
         """Record one freshly dispatched launch (scheduler thread only)."""
-        self._inflight.append(dev)
+        self._inflight.append((dev, time.monotonic(), on_retire))
 
 
 class PanelLane:
@@ -283,29 +338,48 @@ class PanelLane:
     device: the pre-compilable width buckets, a pool of host staging
     buffers (one per pacer slot — see :class:`LaunchPacer` for why that
     size is the aliasing guarantee), zero-copy pack/pad, the launch call,
-    and resolving or failing the chunk's futures.  ``PanelRuntime`` owns
-    one lane; ``MultiTenantRuntime`` owns one lane per tenant, all paced
-    by one shared :class:`LaunchPacer`.
+    and resolving the chunk's futures.  ``PanelRuntime`` owns one lane;
+    ``MultiTenantRuntime`` owns one lane per tenant, all paced by one
+    shared :class:`LaunchPacer`.
+
+    Resilience hooks (all optional): ``injector`` wraps the launch with a
+    chaos :class:`~repro.serve.faults.FaultInjector` (scheduler-thread
+    state, like the staging pool); ``fallback`` is the reference launch the
+    NaN/Inf guard relaunches a poisoned panel through; ``guard_outputs``
+    attaches that guard to every launched panel (costs one host copy of
+    the packed panel per launch, so it is opt-in); ``on_fallback`` is the
+    owning runtime's locked stats callback.
     """
 
     def __init__(self, n: int, max_batch: int, launch: Callable,
-                 n_dev: int = 1, slots: int = 2):
+                 n_dev: int = 1, slots: int = 2, injector=None,
+                 fallback: Callable | None = None,
+                 guard_outputs: bool = False,
+                 on_fallback: Callable | None = None):
         self.n = int(n)
         self.max_batch = int(max_batch)
         self.widths = panel_width_buckets(self.max_batch, n_dev)
-        self._launch = launch
+        self.injector = injector
+        self._inner = launch            # un-instrumented: warmup/compile path
+        self._launch = injector.wrap(launch) if injector is not None else launch
+        self._fallback = fallback
+        self._guard_outputs = bool(guard_outputs)
+        self._on_fallback = on_fallback
         self._staging = [np.zeros((self.n, self.max_batch), np.float32)
                          for _ in range(slots)]
         self._buf = 0
 
-    def launch_panel(self, chunk, pacer: LaunchPacer) -> int | None:
+    def launch_panel(self, chunk, pacer: LaunchPacer, on_retire=None):
         """Pack ``chunk`` into the current staging buffer, pad to its width
         bucket, launch, and resolve the chunk's futures.
 
         Scheduler-thread only, and only AFTER ``pacer.wait_for_slot()`` —
-        that ordering is the staging-buffer reuse invariant.  Returns the
-        launched width, or ``None`` when the launch raised (the futures
-        then carry the exception).
+        that ordering is the staging-buffer reuse invariant.  Returns
+        ``(w, None, dispatch_s)`` on success or ``(None, exc, dispatch_s)``
+        when the launch raised.  Failure handling (fail vs retry) is the
+        OWNING RUNTIME's decision, made under its lock — the lane never
+        fails futures itself, so a retried chunk can simply re-enter the
+        pending queue.
         """
         w = width_for(len(chunk), self.widths)
         buf = self._staging[self._buf]
@@ -313,33 +387,46 @@ class PanelLane:
             buf[:, j] = q
         if len(chunk) < w:
             buf[:, len(chunk):w] = 0.0              # stale pad from last reuse
+        t0 = time.monotonic()
         try:
             # jnp.asarray on CPU can zero-copy ALIAS the staging buffer —
             # safe ONLY because of the pacing invariant (see LaunchPacer).
             with _strict_transfer_guard():
                 dev = self._launch(jnp.asarray(buf[:, :w]))
-        except Exception as exc:                    # propagate to awaiters
+        except Exception as exc:
             # _buf deliberately NOT advanced: nothing holds this buffer (a
             # failing launch must raise before dispatching work that reads
             # the panel), and advancing without a pacer entry would
             # desynchronize the buffer rotation from the pacing FIFO —
             # the next rotation could then repack a buffer whose launch is
             # still computing.
-            for _, fut, _ in chunk:
-                fut._fail(exc)
-            return None
-        record = _PanelRecord(dev)
-        pacer.commit(dev)
+            return None, exc, time.monotonic() - t0
+        dispatch_s = time.monotonic() - t0
+        guard = None
+        if self._guard_outputs:
+            # the guard must NOT retain the staging buffer (it is repacked
+            # after the pacer retires this launch) nor the device result
+            # (zero-copy aliasing): it keeps its own host copy
+            guard = NaNGuard(buf[:, :w].copy(), len(chunk), self._fallback,
+                             self._on_fallback)
+        record = _PanelRecord(dev, guard)
+        pacer.commit(dev, on_retire)
         self._buf = (self._buf + 1) % len(self._staging)
         for j, (_, fut, _) in enumerate(chunk):
             fut._resolve(record, j)
-        return w
+        return w, None, dispatch_s
 
     def precompile_width(self, w: int):
-        """Warm the launch callable on a zero ``(n, w)`` panel (blocking)."""
+        """Warm the launch callable on a zero ``(n, w)`` panel (blocking).
+
+        Uses the UN-instrumented launch: warmup must not draw from the
+        chaos schedule (it would skew the injection sequence and could
+        fail compiles), and the jit cache is keyed on the inner callable
+        either way.
+        """
         z = jnp.asarray(np.zeros((self.n, w), np.float32))
         # hlint: disable=host-sync -- blocking warmup/compile path, documented as such; never runs between submit and fetch
-        jax.block_until_ready(self._launch(z))
+        jax.block_until_ready(self._inner(z))
 
 
 class PanelRuntime:
@@ -371,6 +458,27 @@ class PanelRuntime:
     max_inflight : int, optional
         Double-buffered launch depth: at most this many panels outstanding
         on device (see :class:`LaunchPacer`).
+    chaos : None | str | ChaosSpec, optional
+        Fault-injection schedule (``serve.faults``).  ``None`` (default)
+        defers to the ``REPRO_CHAOS`` env twin; a spec string or parsed
+        :class:`~repro.serve.faults.ChaosSpec` injects explicitly; an
+        empty string disables injection even when the env var is set.
+    resilience : ResiliencePolicy, optional
+        Failure containment (retry/backoff, circuit breaker, launch
+        deadline, NaN/Inf output validation).  ``None`` means no
+        containment — UNLESS chaos injection is active, in which case the
+        default :class:`~repro.serve.faults.ResiliencePolicy` is installed
+        (an injected fault without a containment story would just be an
+        outage).
+    shed_above : int, optional
+        Load-shedding admission budget: ``submit`` raises
+        :class:`~repro.serve.faults.OverloadedError` while the queue holds
+        this many requests, instead of blocking (``max_queue``) or growing
+        unboundedly.  Must be >= ``max_batch``.
+    fallback : Callable, optional
+        Reference launch (``(n, w) -> (n, w)``, e.g. the server's
+        ``use_pallas=False`` path) used for the one-shot degraded relaunch
+        of a panel whose output failed NaN/Inf validation.
 
     Attributes
     ----------
@@ -380,7 +488,11 @@ class PanelRuntime:
     stats : _Stats
         Dict-style counters — ``launched_widths`` (bounded deque, most
         recent panels), ``panels_launched`` (running total),
-        ``max_queue_depth``, ``backpressure_waits`` — mutated under the
+        ``max_queue_depth``, ``backpressure_waits``, plus the resilience
+        set: ``retries``, ``panel_failures``, ``faults_injected`` (per-kind
+        chaos tallies), ``breaker_state``, ``fallback_launches``,
+        ``shed_requests``, ``slow_launches``, and ``events`` (bounded
+        failure-event trace of ``(t, kind, detail)``) — mutated under the
         runtime lock.  CALL it (``runtime.stats()``) for a consistent
         snapshot copied under that lock (deques become lists); indexing
         the attribute directly keeps working but reads live state.
@@ -388,26 +500,51 @@ class PanelRuntime:
 
     def __init__(self, n: int, max_batch: int, launch: Callable,
                  n_dev: int = 1, deadline_s: float | None = None,
-                 max_queue: int | None = None, max_inflight: int = 2):
+                 max_queue: int | None = None, max_inflight: int = 2,
+                 chaos=None, resilience: ResiliencePolicy | None = None,
+                 shed_above: int | None = None,
+                 fallback: Callable | None = None):
         if max_queue is not None and max_queue < max_batch:
             raise ValueError(f"max_queue ({max_queue}) must be >= "
                              f"max_batch ({max_batch})")
+        if shed_above is not None and shed_above < max_batch:
+            raise ValueError(f"shed_above ({shed_above}) must be >= "
+                             f"max_batch ({max_batch}) — a full panel "
+                             f"could never be admitted")
+        chaos_spec = resolve_chaos(chaos)
+        if resilience is None and chaos_spec is not None:
+            resilience = ResiliencePolicy()
         self._cv = threading.Condition()
         self._pacer = LaunchPacer(max_inflight)
+        injector = (FaultInjector(chaos_spec, "panel")
+                    if chaos_spec is not None else None)
+        guard = resilience is not None and resilience.validate_outputs
         self._lane = PanelLane(n, max_batch, launch, n_dev=n_dev,
-                               slots=max_inflight)
+                               slots=max_inflight, injector=injector,
+                               fallback=fallback, guard_outputs=guard,
+                               on_fallback=self._count_fallback)
         self.n = self._lane.n
         self.max_batch = self._lane.max_batch
         self.widths = self._lane.widths
         self.deadline_s = deadline_s
         self.max_queue = max_queue
         self.max_inflight = max_inflight
+        self.shed_above = shed_above
+        self.resilience = resilience    # frozen policy (lock-free reads ok)
+        self._res = (LaneResilience(resilience, "panel")
+                     if resilience is not None else None)
         # launched_widths is bounded (always-on servers launch forever);
         # panels_launched is the running total
         self.stats = _Stats(self._cv,
                             {"launched_widths": deque(maxlen=1024),
                              "panels_launched": 0, "max_queue_depth": 0,
-                             "backpressure_waits": 0})
+                             "backpressure_waits": 0,
+                             "retries": 0, "panel_failures": 0,
+                             "faults_injected": {}, "fallback_launches": 0,
+                             "shed_requests": 0, "slow_launches": 0,
+                             "breaker_state": ("disabled" if self._res is None
+                                               else self._res.breaker_state()),
+                             "events": deque(maxlen=256)})
         self._pending: list = []        # [(np vector, PanelFuture, t_arrival)]
         self._flush_goal = 0            # launch until this many have launched
         self._launched = 0              # requests launched so far (FIFO count)
@@ -423,20 +560,23 @@ class PanelRuntime:
         """Enqueue one request vector; returns its future immediately.
 
         Blocks only for backpressure (``max_queue``); never for the device.
-        Raises ``RuntimeError`` once the runtime has been closed.
+        Raises ``RuntimeError`` once the runtime has been closed,
+        ``ValueError`` on an invalid payload (validated HERE so it cannot
+        poison co-batched neighbors at launch),
+        ``CircuitOpenError`` while the breaker quarantines the lane, and
+        ``OverloadedError`` when load shedding rejects the request.
         """
-        # hlint: disable=host-sync -- client-side input normalization of host data on the submit thread; the h2d upload happens once per panel at launch
-        q = np.asarray(vec, dtype=np.float32)
-        if q.shape != (self.n,):
-            raise ValueError(f"request shape {q.shape} != ({self.n},)")
+        q = validate_request(vec, self.n)
         fut = PanelFuture()
         with self._cv:
             self._check_open()
+            self._check_admission()
             while (self.max_queue is not None
                    and len(self._pending) >= self.max_queue):
                 self.stats["backpressure_waits"] += 1
                 self._cv.wait()
                 self._check_open()
+                self._check_admission()
             self._pending.append((q, fut, time.monotonic()))
             self._submitted += 1
             depth = len(self._pending)
@@ -452,6 +592,42 @@ class PanelRuntime:
                 "PanelRuntime is closed — submit() rejected; results of "
                 "already-submitted requests remain fetchable via their "
                 "futures, but new work needs a new runtime")
+
+    def _check_admission(self):
+        """Breaker + load-shedding admission control (caller holds _cv)."""
+        if self._res is not None:
+            if not self._res.allow_submit(time.monotonic()):
+                raise CircuitOpenError(
+                    "circuit breaker is open after consecutive panel "
+                    "failures — submits fail fast until the cooldown "
+                    "elapses and a half-open probe panel succeeds")
+            self._sync_breaker_stat()   # open -> half_open is observable
+        if self.shed_above is not None \
+                and len(self._pending) >= self.shed_above:
+            self.stats["shed_requests"] += 1
+            self._event("shed", f"queue depth {len(self._pending)} >= "
+                                f"shed_above {self.shed_above}")
+            raise OverloadedError(
+                f"request shed: {len(self._pending)} queued requests "
+                f">= admission budget shed_above={self.shed_above} — "
+                f"retry later or raise the budget")
+
+    def _sync_breaker_stat(self):
+        """Mirror the breaker state into stats (caller holds _cv)."""
+        if self._res is not None:
+            self.stats["breaker_state"] = self._res.breaker_state()
+
+    def _count_fallback(self):
+        # called from the FETCHING client thread (NaNGuard), not the
+        # scheduler — hence it takes the lock itself
+        with self._cv:
+            self.stats["fallback_launches"] += 1
+            self._event("fallback", "NaN/Inf panel relaunched through the "
+                                    "reference path")
+
+    def _event(self, kind: str, detail: str):
+        """Append to the bounded failure-event trace (caller holds _cv)."""
+        self.stats["events"].append((time.monotonic(), kind, detail))
 
     def flush(self):
         """Launch everything already submitted, partial panels included."""
@@ -519,6 +695,52 @@ class PanelRuntime:
             return None
         return self._pending[0][2] + self.deadline_s
 
+    def _launchable(self, now: float) -> bool:
+        """Is a panel ready to take right now?  (Caller holds _cv; the
+        retry-backoff gate is checked separately by the scheduler.)"""
+        if len(self._pending) >= self.max_batch:
+            return True                             # full panel ready
+        if self._pending and self._launched < self._flush_goal:
+            return True                             # flushed partial panel
+        deadline = self._next_deadline()
+        return deadline is not None and deadline <= now
+
+    def _handle_failure(self, chunk, exc, now: float):
+        """One panel launch failed (caller holds _cv): retry with backoff,
+        fail the panel, or fail it AND open the breaker."""
+        verdict = ("fail" if self._res is None
+                   else self._res.decide_failure(now))
+        if verdict == "retry":
+            # the panel RE-ENTERS the pending queue at the front — the
+            # relaunch goes back through wait_for_slot and the staging
+            # rotation like any other panel (pacing FIFO preserved)
+            self._pending[:0] = chunk
+            self._launched -= len(chunk)
+            self.stats["retries"] += 1
+            self._event("retry", f"launch attempt failed ({exc!r}); panel "
+                                 f"of {len(chunk)} re-queued with backoff")
+            return
+        for _, fut, _ in chunk:
+            fut._fail(exc)
+        self.stats["panel_failures"] += 1
+        self._sync_breaker_stat()
+        self._event("panel_failed", f"panel of {len(chunk)} failed: {exc!r}")
+        if verdict == "open":
+            # quarantine: everything queued fails fast (the breaker's
+            # whole point is not to hold futures hostage to a dead lane)
+            dropped, self._pending[:] = list(self._pending), []
+            self._launched += len(dropped)
+            self._event("breaker_open",
+                        f"circuit opened; {len(dropped)} queued requests "
+                        f"failed fast")
+            err = CircuitOpenError(
+                "circuit breaker opened after consecutive panel failures "
+                "— queued request failed fast; resubmit after the "
+                "cooldown (half-open probe)")
+            err.__cause__ = exc
+            for _, fut, _ in dropped:
+                fut._fail(err)
+
     def _scheduler(self):
         while True:
             # launch pacing: block on the oldest in-flight panel BEFORE
@@ -528,16 +750,20 @@ class PanelRuntime:
                 while True:
                     if self._closing:
                         return
-                    if len(self._pending) >= self.max_batch:
-                        break                       # full panel ready
-                    if self._pending and self._launched < self._flush_goal:
-                        break                       # flushed partial panel
-                    deadline = self._next_deadline()
-                    if deadline is not None:
-                        wait = deadline - time.monotonic()
-                        if wait <= 0:
-                            break                   # deadline-expired panel
-                        self._cv.wait(wait)
+                    now = time.monotonic()
+                    gate = (self._res.gate(now)
+                            if self._res is not None else None)
+                    if gate is None and self._launchable(now):
+                        break
+                    # sleep until the earliest of: retry-backoff expiry,
+                    # oldest-request deadline (None = until notified)
+                    wakes = [t for t in (gate, self._next_deadline())
+                             if t is not None]
+                    if wakes:
+                        wait = min(wakes) - time.monotonic()
+                        if wait > 0:
+                            self._cv.wait(wait)
+                        # else: loop re-evaluates with the gate expired
                     else:
                         self._cv.wait()
                 chunk = self._pending[:self.max_batch]
@@ -545,13 +771,30 @@ class PanelRuntime:
                 self._launched += len(chunk)
                 self._in_launch = True
                 self._cv.notify_all()               # wake backpressured submits
-            w = None
+            w, exc, dispatch_s = None, None, 0.0
             try:
-                w = self._lane.launch_panel(chunk, self._pacer)
+                w, exc, dispatch_s = self._lane.launch_panel(
+                    chunk, self._pacer)
             finally:
                 with self._cv:
                     self._in_launch = False
+                    now = time.monotonic()
                     if w is not None:               # stats mutate under _cv
                         self.stats["launched_widths"].append(w)
                         self.stats["panels_launched"] += 1
+                        if self._res is not None:
+                            self._res.on_success()
+                            self._sync_breaker_stat()
+                            dl = self.resilience.launch_deadline_s
+                            if dl is not None and dispatch_s > dl:
+                                self.stats["slow_launches"] += 1
+                                self._event(
+                                    "slow_launch",
+                                    f"dispatch took {dispatch_s:.4f}s > "
+                                    f"deadline {dl}s")
+                    elif exc is not None:
+                        self._handle_failure(chunk, exc, now)
+                    if self._lane.injector is not None:
+                        self.stats["faults_injected"] = dict(
+                            self._lane.injector.counters)
                     self._cv.notify_all()           # wake drain()

@@ -91,15 +91,19 @@ class _PanelServerBase:
     """
 
     def _init_runtime(self, n: int, max_batch: int, n_dev: int,
-                      deadline_s, max_queue):
+                      deadline_s, max_queue, chaos=None, resilience=None,
+                      shed_above=None):
         self.n_dev = n_dev
         self.runtime = PanelRuntime(n, max_batch, self._launch, n_dev=n_dev,
                                     deadline_s=deadline_s,
-                                    max_queue=max_queue)
+                                    max_queue=max_queue, chaos=chaos,
+                                    resilience=resilience,
+                                    shed_above=shed_above,
+                                    fallback=self._fallback)
 
     def tenant_spec(self, weight: float = 1.0,
                     deadline_s: float | None = None,
-                    max_queue: int | None = None):
+                    max_queue: int | None = None, **spec_kw):
         """This server's launch target as a multi-tenant registration.
 
         Returns a ``repro.serve.tenancy.TenantSpec`` wrapping the SAME
@@ -110,17 +114,21 @@ class _PanelServerBase:
             mtr.add_tenant("apply-eu", srv.tenant_spec(weight=2.0))
 
         ``weight`` is the tenant's fair-share weight; ``deadline_s`` /
-        ``max_queue`` default to the server's own settings.
+        ``max_queue`` default to the server's own settings; the server's
+        reference executor rides along as the NaN/Inf ``fallback``.
+        Extra keywords (``resilience``, ``shed_above``, ...) pass through
+        to the spec.
         """
         from repro.serve.tenancy import TenantSpec
         if deadline_s is None:
             deadline_s = self.runtime.deadline_s
         if max_queue is None:
             max_queue = self.runtime.max_queue
+        spec_kw.setdefault("fallback", self._fallback)
         return TenantSpec(n=self.n, max_batch=self.max_batch,
                           launch=self._launch, n_dev=self.n_dev,
                           weight=weight, deadline_s=deadline_s,
-                          max_queue=max_queue)
+                          max_queue=max_queue, **spec_kw)
 
     @property
     def widths(self) -> tuple:
@@ -193,18 +201,28 @@ class HMatrixServer(_PanelServerBase):
         waited this long (latency bound under trickle traffic).
     max_queue : int, optional
         Async mode: backpressure cap on queued-but-unlaunched requests.
+    chaos, resilience, shed_above
+        Resilience knobs forwarded to the runtime (``serve.faults`` /
+        ``docs/RESILIENCE.md``); the server wires its ``use_pallas=False``
+        reference executor as the NaN/Inf fallback automatically.
     """
 
     def __init__(self, hm: HMatrix, max_batch: int = 64,
                  use_pallas: bool = False, mesh=None,
                  deadline_s: float | None = None,
-                 max_queue: int | None = None):
+                 max_queue: int | None = None, chaos=None,
+                 resilience=None, shed_above: int | None = None):
         self.n = hm.shape[0]
         self.max_batch = _mesh_panel_width(max_batch, mesh)
         self._apply = make_apply(hm, use_pallas=use_pallas, mesh=mesh)
         self._launch = self._apply
+        # the reference executor doubles as the NaN/Inf degraded path (a
+        # closure: nothing compiles unless a poisoned panel needs it)
+        self._fallback = (self._apply if not use_pallas
+                          else make_apply(hm, use_pallas=False, mesh=mesh))
         self._init_runtime(self.n, self.max_batch, _mesh_n_dev(mesh),
-                           deadline_s, max_queue)
+                           deadline_s, max_queue, chaos=chaos,
+                           resilience=resilience, shed_above=shed_above)
 
     def serve(self, queries) -> list:
         """Apply the operator to a batch of queries, in panels.
@@ -304,6 +322,10 @@ class HMatrixSolveServer(_PanelServerBase):
         "any column active" loop predicate.
     deadline_s, max_queue
         Async-mode knobs, as :class:`HMatrixServer`.
+    chaos, resilience, shed_above
+        Resilience knobs, as :class:`HMatrixServer`; the fallback is a
+        ``use_pallas=False`` reference solve (its convergence record is
+        dropped — degraded panels do not pollute ``last_info``).
     """
 
     LAST_INFO_MAX = 256          # panels of convergence history to retain
@@ -312,7 +334,8 @@ class HMatrixSolveServer(_PanelServerBase):
                  tol: float = 1e-5, max_iter: int = 300,
                  precondition: bool = True, use_pallas: bool = False,
                  mesh=None, deadline_s: float | None = None,
-                 max_queue: int | None = None):
+                 max_queue: int | None = None, chaos=None,
+                 resilience=None, shed_above: int | None = None):
         self.n = hm.shape[0]
         self.max_batch = _mesh_panel_width(max_batch, mesh)
         self.last_info = deque(maxlen=self.LAST_INFO_MAX)
@@ -325,9 +348,20 @@ class HMatrixSolveServer(_PanelServerBase):
             self.last_info.append(info)             # lazy: no device sync
             return c
 
+        ref_solve = (self._solve if not use_pallas
+                     else make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
+                                      precondition=precondition,
+                                      use_pallas=False, mesh=mesh))
+
+        def fallback(panel):
+            c, _ = ref_solve(panel)     # degraded path: no last_info record
+            return c
+
         self._launch = launch
+        self._fallback = fallback
         self._init_runtime(self.n, self.max_batch, _mesh_n_dev(mesh),
-                           deadline_s, max_queue)
+                           deadline_s, max_queue, chaos=chaos,
+                           resilience=resilience, shed_above=shed_above)
 
     def serve(self, targets) -> list:
         """Solve ``(A + sigma^2 I) c = f`` for a batch of targets, in panels.

@@ -57,7 +57,11 @@ from collections import deque
 from dataclasses import dataclass, replace
 from typing import Callable
 
-from repro.serve.runtime import (LaunchPacer, PanelFuture, PanelLane, _Stats)
+from repro.serve.faults import (CircuitOpenError, FaultInjector, LaneResilience,
+                                OverloadedError, ResiliencePolicy,
+                                StragglerMonitor, resolve_chaos)
+from repro.serve.runtime import (LaunchPacer, PanelFuture, PanelLane, _Stats,
+                                 validate_request)
 
 import numpy as np
 
@@ -88,6 +92,16 @@ class TenantSpec:
         waited this long.
     max_queue : int, optional
         Per-tenant backpressure cap on queued-but-unlaunched requests.
+    fallback : Callable, optional
+        Reference launch for the NaN/Inf degraded path (``apply_tenant`` /
+        ``solve_tenant`` and the servers wire their ``use_pallas=False``
+        executor automatically).
+    resilience : ResiliencePolicy, optional
+        Per-tenant containment override; ``None`` inherits the runtime's
+        policy (which defaults on when chaos injection is active).
+    shed_above : int, optional
+        Per-tenant load-shedding admission budget: ``submit`` raises
+        ``OverloadedError`` at this queue depth instead of blocking.
     """
 
     n: int
@@ -97,6 +111,9 @@ class TenantSpec:
     weight: float = 1.0
     deadline_s: float | None = None
     max_queue: int | None = None
+    fallback: Callable | None = None
+    resilience: ResiliencePolicy | None = None
+    shed_above: int | None = None
 
     def __post_init__(self):
         if self.weight <= 0:
@@ -104,6 +121,10 @@ class TenantSpec:
         if self.max_queue is not None and self.max_queue < self.max_batch:
             raise ValueError(f"max_queue ({self.max_queue}) must be >= "
                              f"max_batch ({self.max_batch})")
+        if self.shed_above is not None and self.shed_above < self.max_batch:
+            raise ValueError(f"shed_above ({self.shed_above}) must be >= "
+                             f"max_batch ({self.max_batch}) — a full panel "
+                             f"could never be admitted")
 
 
 def apply_tenant(hm, max_batch: int = 64, use_pallas: bool = False,
@@ -117,6 +138,10 @@ def apply_tenant(hm, max_batch: int = 64, use_pallas: bool = False,
     from repro.core.hmatrix import make_apply
     from repro.parallel.hshard import mesh_device_count, pad_panel_width
     n_dev = mesh_device_count(mesh)
+    # the reference (non-Pallas) executor doubles as the NaN/Inf fallback;
+    # closures are cheap — nothing compiles until a degraded panel needs it
+    spec_kw.setdefault("fallback",
+                       make_apply(hm, use_pallas=False, mesh=mesh))
     return TenantSpec(n=hm.shape[0],
                       max_batch=pad_panel_width(max_batch, n_dev),
                       launch=make_apply(hm, use_pallas=use_pallas, mesh=mesh),
@@ -147,6 +172,15 @@ def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
             info_log.append(info)                   # lazy: no device sync
         return c
 
+    ref_solve = make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
+                            precondition=precondition, use_pallas=False,
+                            mesh=mesh)
+
+    def fallback(panel):
+        c, _ = ref_solve(panel)                     # degraded path: no info log
+        return c
+
+    spec_kw.setdefault("fallback", fallback)
     return TenantSpec(n=hm.shape[0],
                       max_batch=pad_panel_width(max_batch, n_dev),
                       launch=launch, n_dev=n_dev, **spec_kw)
@@ -157,13 +191,19 @@ class _Tenant:
 
     __slots__ = ("name", "spec", "lane", "pending", "submitted", "launched",
                  "flush_goal", "in_launch", "weight", "deficit",
-                 "last_served", "removing", "stats")
+                 "last_served", "removing", "stats", "res")
 
-    def __init__(self, name: str, spec: TenantSpec, slots: int, lock):
+    def __init__(self, name: str, spec: TenantSpec, slots: int, lock,
+                 injector=None, resilience=None, on_fallback=None):
         self.name = name
         self.spec = spec
+        guard = resilience is not None and resilience.validate_outputs
         self.lane = PanelLane(spec.n, spec.max_batch, spec.launch,
-                              n_dev=spec.n_dev, slots=slots)
+                              n_dev=spec.n_dev, slots=slots,
+                              injector=injector, fallback=spec.fallback,
+                              guard_outputs=guard, on_fallback=on_fallback)
+        self.res = (LaneResilience(resilience, name)
+                    if resilience is not None else None)
         self.pending: list = []         # [(np vector, PanelFuture, t_arrival)]
         self.submitted = 0
         self.launched = 0
@@ -177,7 +217,15 @@ class _Tenant:
                                    "panels_launched": 0, "submitted": 0,
                                    "max_queue_depth": 0,
                                    "backpressure_waits": 0,
-                                   "deadline_flushes": 0})
+                                   "deadline_flushes": 0,
+                                   "retries": 0, "panel_failures": 0,
+                                   "faults_injected": {},
+                                   "fallback_launches": 0,
+                                   "shed_requests": 0, "slow_launches": 0,
+                                   "breaker_state": ("disabled"
+                                                     if self.res is None
+                                                     else "closed"),
+                                   "events": deque(maxlen=256)})
 
     def drained(self) -> bool:
         return not self.pending and not self.in_launch
@@ -259,27 +307,54 @@ class MultiTenantRuntime:
         :class:`~repro.serve.runtime.LaunchPacer`).  Every tenant's
         staging pool is sized to it, which is what carries the
         staging-buffer aliasing guarantee across tenants.
+    chaos : None | str | ChaosSpec, optional
+        Fault-injection schedule (``serve.faults``); ``None`` defers to
+        the ``REPRO_CHAOS`` env twin.  Each tenant gets an INDEPENDENT
+        deterministic stream derived from the seed + its name.
+    resilience : ResiliencePolicy, optional
+        Default containment policy for tenants that do not set their own
+        ``TenantSpec.resilience``.  Defaults on when chaos is active.
+    shed_above : int, optional
+        GLOBAL load-shedding admission budget: ``submit`` on any tenant
+        raises ``OverloadedError`` while the TOTAL queued requests across
+        tenants reach this budget (per-tenant budgets live on the spec).
 
     Attributes
     ----------
     stats : _Stats
         Global counters — ``panels_launched``, ``launch_order`` (bounded
         deque of tenant names in launch order; the fairness trace),
-        ``tenants_added`` / ``tenants_removed``.  Call ``stats()`` for a
-        locked snapshot; per-tenant counters live on each handle.
+        ``tenants_added`` / ``tenants_removed``, plus the resilience
+        rollups ``retries`` / ``panel_failures`` / ``shed_requests`` and
+        ``straggler_tenants`` (EWMA outliers per
+        :class:`~repro.serve.faults.StragglerMonitor`, fed at pacer
+        retirement).  Call ``stats()`` for a locked snapshot; per-tenant
+        counters (incl. ``breaker_state``, ``events``) live on each
+        handle.
     """
 
-    def __init__(self, max_inflight: int = 2):
+    def __init__(self, max_inflight: int = 2, chaos=None,
+                 resilience: ResiliencePolicy | None = None,
+                 shed_above: int | None = None):
+        chaos_spec = resolve_chaos(chaos)
+        if resilience is None and chaos_spec is not None:
+            resilience = ResiliencePolicy()
         self._cv = threading.Condition()
         self._pacer = LaunchPacer(max_inflight)
         self.max_inflight = int(max_inflight)
+        self.chaos_spec = chaos_spec    # frozen (lock-free reads ok)
+        self.resilience = resilience    # frozen default policy
+        self.shed_above = shed_above
+        self._monitor = StragglerMonitor()
         self._tenants: dict[str, _Tenant] = {}
         self._compiled: set = set()     # warmed (tenant name, width) pairs
         self._launch_seq = 0
         self.stats = _Stats(self._cv,
                             {"panels_launched": 0,
                              "launch_order": deque(maxlen=2048),
-                             "tenants_added": 0, "tenants_removed": 0})
+                             "tenants_added": 0, "tenants_removed": 0,
+                             "retries": 0, "panel_failures": 0,
+                             "shed_requests": 0, "straggler_tenants": []})
         self._closing = False
         self._closed = False
         self._thread: threading.Thread | None = None
@@ -302,15 +377,32 @@ class MultiTenantRuntime:
                             f"tenant_spec() method, got {type(spec)!r}")
         if overrides:
             spec = replace(spec, **overrides)
+        injector = (FaultInjector(self.chaos_spec, name)
+                    if self.chaos_spec is not None else None)
+        resilience = (spec.resilience if spec.resilience is not None
+                      else self.resilience)
         with self._cv:
             self._check_open()
             if name in self._tenants:
                 raise ValueError(f"tenant {name!r} already registered")
-            tenant = _Tenant(name, spec, self.max_inflight, self._cv)
+            tenant = _Tenant(name, spec, self.max_inflight, self._cv,
+                             injector=injector, resilience=resilience,
+                             on_fallback=None)
+            tenant.lane._on_fallback = self._make_on_fallback(tenant)
             self._tenants[name] = tenant
             self.stats["tenants_added"] += 1
             self._cv.notify_all()
             return TenantHandle(self, tenant)
+
+    def _make_on_fallback(self, tenant: _Tenant):
+        """Fetch-thread callback counting a NaN/Inf degraded relaunch."""
+        def on_fallback():
+            with self._cv:
+                tenant.stats["fallback_launches"] += 1
+                tenant.stats["events"].append(
+                    (time.monotonic(), "fallback",
+                     "NaN/Inf panel relaunched through the reference path"))
+        return on_fallback
 
     def remove_tenant(self, name: str):
         """Drain ``name``'s queue, then deregister it.
@@ -331,6 +423,7 @@ class MultiTenantRuntime:
             self._cv.wait_for(lambda: tenant.drained() or self._closing)
             self._tenants.pop(name, None)
             self._compiled = {kw for kw in self._compiled if kw[0] != name}
+            self._monitor.forget(name)
             self.stats["tenants_removed"] += 1
             self._cv.notify_all()                   # wake backpressured submits
 
@@ -341,19 +434,18 @@ class MultiTenantRuntime:
     # -- client side --------------------------------------------------------
 
     def _submit(self, tenant: _Tenant, vec) -> PanelFuture:
-        # hlint: disable=host-sync -- client-side input normalization of host data on the submit thread; the h2d upload happens once per panel at launch
-        q = np.asarray(vec, dtype=np.float32)
-        if q.shape != (tenant.lane.n,):
-            raise ValueError(f"request shape {q.shape} != ({tenant.lane.n},) "
-                             f"for tenant {tenant.name!r}")
+        q = validate_request(vec, tenant.lane.n,
+                             who=f"request for tenant {tenant.name!r}")
         fut = PanelFuture()
         with self._cv:
             self._check_submittable(tenant)
+            self._check_admission(tenant)
             cap = tenant.spec.max_queue
             while cap is not None and len(tenant.pending) >= cap:
                 tenant.stats["backpressure_waits"] += 1
                 self._cv.wait()
                 self._check_submittable(tenant)
+                self._check_admission(tenant)
             tenant.pending.append((q, fut, time.monotonic()))
             tenant.submitted += 1
             tenant.stats["submitted"] += 1
@@ -375,6 +467,43 @@ class MultiTenantRuntime:
         if tenant.removing:
             raise RuntimeError(f"tenant {tenant.name!r} has been removed "
                                f"from the runtime — submit() rejected")
+
+    def _check_admission(self, tenant: _Tenant):
+        """Breaker + load-shedding admission control (caller holds _cv)."""
+        if tenant.res is not None:
+            if not tenant.res.allow_submit(time.monotonic()):
+                raise CircuitOpenError(
+                    f"tenant {tenant.name!r} circuit breaker is open after "
+                    f"consecutive panel failures — submits fail fast until "
+                    f"the cooldown elapses and a half-open probe panel "
+                    f"succeeds")
+            tenant.stats["breaker_state"] = tenant.res.breaker_state()
+        cap = tenant.spec.shed_above
+        if cap is not None and len(tenant.pending) >= cap:
+            tenant.stats["shed_requests"] += 1
+            self._tenant_event(tenant, "shed",
+                               f"tenant queue depth {len(tenant.pending)} "
+                               f">= shed_above {cap}")
+            raise OverloadedError(
+                f"request shed: tenant {tenant.name!r} holds "
+                f"{len(tenant.pending)} queued requests >= its admission "
+                f"budget shed_above={cap} — retry later")
+        if self.shed_above is not None:
+            total = sum(len(t.pending) for t in self._tenants.values())
+            if total >= self.shed_above:
+                tenant.stats["shed_requests"] += 1
+                self.stats["shed_requests"] += 1
+                self._tenant_event(tenant, "shed",
+                                   f"global queue depth {total} >= "
+                                   f"shed_above {self.shed_above}")
+                raise OverloadedError(
+                    f"request shed: {total} queued requests across all "
+                    f"tenants >= the global admission budget "
+                    f"shed_above={self.shed_above} — retry later")
+
+    def _tenant_event(self, tenant: _Tenant, kind: str, detail: str):
+        """Append to a tenant's bounded event trace (caller holds _cv)."""
+        tenant.stats["events"].append((time.monotonic(), kind, detail))
 
     def flush(self, name: str | None = None):
         """Launch everything already submitted (one tenant, or all)."""
@@ -460,6 +589,8 @@ class MultiTenantRuntime:
         if not tenant.pending:
             tenant.deficit = 0.0        # classic DRR: idle banks no credit
             return False
+        if tenant.res is not None and tenant.res.gate(now) is not None:
+            return False                # retry backoff: not launchable yet
         if len(tenant.pending) >= tenant.lane.max_batch:
             return True                 # full panel
         if tenant.launched < tenant.flush_goal:
@@ -467,12 +598,20 @@ class MultiTenantRuntime:
         dl = tenant.spec.deadline_s
         return dl is not None and tenant.pending[0][2] + dl <= now
 
-    def _next_deadline(self) -> float | None:
-        """Earliest pending deadline across tenants (None if no deadlines)."""
-        deadlines = [t.pending[0][2] + t.spec.deadline_s
-                     for t in self._tenants.values()
-                     if t.pending and t.spec.deadline_s is not None]
-        return min(deadlines) if deadlines else None
+    def _next_wake(self, now: float) -> float | None:
+        """Earliest scheduler wake time across tenants: pending deadlines
+        plus retry-backoff gate expiries (None if neither applies)."""
+        wakes = []
+        for t in self._tenants.values():
+            if not t.pending:
+                continue
+            if t.spec.deadline_s is not None:
+                wakes.append(t.pending[0][2] + t.spec.deadline_s)
+            if t.res is not None:
+                gate = t.res.gate(now)
+                if gate is not None:
+                    wakes.append(gate)
+        return min(wakes) if wakes else None
 
     def _pick(self, ready: list) -> _Tenant:
         """Weighted deficit round robin over the ready tenants.
@@ -511,9 +650,9 @@ class MultiTenantRuntime:
                     if ready:
                         tenant = self._pick(ready)
                         break
-                    deadline = self._next_deadline()
-                    if deadline is not None:
-                        wait = deadline - time.monotonic()
+                    wake = self._next_wake(now)
+                    if wake is not None:
+                        wait = wake - time.monotonic()
                         if wait > 0:
                             self._cv.wait(wait)
                     else:
@@ -528,12 +667,14 @@ class MultiTenantRuntime:
                 self._launch_seq += 1
                 tenant.last_served = self._launch_seq
                 self._cv.notify_all()               # wake backpressured submits
-            w = None
+            w, exc, dispatch_s = None, None, 0.0
             try:
-                w = tenant.lane.launch_panel(chunk, self._pacer)
+                w, exc, dispatch_s = tenant.lane.launch_panel(
+                    chunk, self._pacer, self._make_on_retire(tenant.name))
             finally:
                 with self._cv:
                     tenant.in_launch = False
+                    now = time.monotonic()
                     if w is not None:               # stats mutate under _cv
                         tenant.stats["launched_widths"].append(w)
                         tenant.stats["panels_launched"] += 1
@@ -542,4 +683,68 @@ class MultiTenantRuntime:
                         self.stats["panels_launched"] += 1
                         self.stats["launch_order"].append(tenant.name)
                         self._compiled.add((tenant.name, w))
+                        if tenant.res is not None:
+                            tenant.res.on_success()
+                            tenant.stats["breaker_state"] = \
+                                tenant.res.breaker_state()
+                            dl = tenant.res.policy.launch_deadline_s
+                            if dl is not None and dispatch_s > dl:
+                                tenant.stats["slow_launches"] += 1
+                                self._tenant_event(
+                                    tenant, "slow_launch",
+                                    f"dispatch took {dispatch_s:.4f}s > "
+                                    f"deadline {dl}s")
+                    elif exc is not None:
+                        self._handle_failure(tenant, chunk, exc, now)
+                    if tenant.lane.injector is not None:
+                        tenant.stats["faults_injected"] = dict(
+                            tenant.lane.injector.counters)
                     self._cv.notify_all()           # wake drain()/remove
+
+    def _handle_failure(self, tenant: _Tenant, chunk, exc, now: float):
+        """One tenant panel launch failed (caller holds _cv): retry with
+        backoff, fail the panel, or fail it AND quarantine the tenant."""
+        verdict = ("fail" if tenant.res is None
+                   else tenant.res.decide_failure(now))
+        if verdict == "retry":
+            # front of the TENANT queue: the relaunch re-enters the shared
+            # pacing FIFO through _pick like any panel (never bypasses it),
+            # and neighbors keep being served during the backoff window
+            tenant.pending[:0] = chunk
+            tenant.launched -= len(chunk)
+            tenant.stats["retries"] += 1
+            self.stats["retries"] += 1
+            self._tenant_event(tenant, "retry",
+                               f"launch attempt failed ({exc!r}); panel of "
+                               f"{len(chunk)} re-queued with backoff")
+            return
+        for _, fut, _ in chunk:
+            fut._fail(exc)
+        tenant.stats["panel_failures"] += 1
+        self.stats["panel_failures"] += 1
+        self._tenant_event(tenant, "panel_failed",
+                           f"panel of {len(chunk)} failed: {exc!r}")
+        if tenant.res is not None:
+            tenant.stats["breaker_state"] = tenant.res.breaker_state()
+        if verdict == "open":
+            dropped, tenant.pending[:] = list(tenant.pending), []
+            tenant.launched += len(dropped)
+            self._tenant_event(tenant, "breaker_open",
+                               f"circuit opened; {len(dropped)} queued "
+                               f"requests failed fast")
+            err = CircuitOpenError(
+                f"tenant {tenant.name!r} circuit breaker opened after "
+                f"consecutive panel failures — queued request failed "
+                f"fast; resubmit after the cooldown (half-open probe)")
+            err.__cause__ = exc
+            for _, fut, _ in dropped:
+                fut._fail(err)
+
+    def _make_on_retire(self, name: str):
+        """Pacer-retirement callback: feed the launch's full latency
+        (commit -> device-done) into the per-tenant straggler EWMA."""
+        def on_retire(elapsed_s: float, ok: bool):
+            with self._cv:
+                self._monitor.record(name, elapsed_s)
+                self.stats["straggler_tenants"] = self._monitor.stragglers()
+        return on_retire

@@ -299,6 +299,79 @@ def test_lock_stats_subscript_mode(lock_registry):
     assert len(fs) == 1 and fs[0].qualname == "R.bad"
 
 
+def test_lock_resilience_state_unlocked_access_fires():
+    """Must-fire against the REAL faults.py registry entry: breaker/retry
+    state read outside a locked-contract method is a submit/scheduler race."""
+    fs = lint("src/repro/serve/faults.py", """\
+        class LaneResilience:
+            def __init__(self):
+                self.attempts = 0
+                self.not_before = 0.0
+            def peek(self):
+                return self.attempts, self.not_before
+        """)
+    assert len(rules_of(fs, "lock-discipline")) == 2
+
+
+def test_lock_resilience_state_in_locked_methods_is_fine():
+    """Must-not-fire twin: the same fields inside the registered
+    caller-holds-lock methods (and __init__) are the documented contract."""
+    fs = lint("src/repro/serve/faults.py", """\
+        class LaneResilience:
+            def __init__(self):
+                self.attempts = 0
+                self.not_before = 0.0
+            def gate(self, now):
+                return self.not_before if now < self.not_before else None
+            def decide_failure(self, now):
+                self.attempts += 1
+                return "retry"
+        class CircuitBreaker:
+            def __init__(self):
+                self.state = "closed"
+                self.failures = 0
+                self.opened_at = 0.0
+            def on_panel_failure(self, now):
+                self.failures += 1
+                self.state = "open"
+                self.opened_at = now
+        """)
+    assert rules_of(fs, "lock-discipline") == []
+
+
+def test_lock_resilience_call_outside_lock_fires_in_runtime():
+    """Calling a LaneResilience lock-contract method without the lock is
+    flagged in the serve schedulers (real runtime.py registry entry)."""
+    src = """\
+        class R:
+            def bad(self):
+                return self._res.gate(0.0)
+            def good(self):
+                with self._cv:
+                    return self._res.gate(0.0)
+        """
+    fs = rules_of(lint("src/repro/serve/runtime.py", src), "lock-discipline")
+    # bad(): both the _res attribute read and the gate() call fire
+    assert len(fs) == 2 and all(f.qualname == "R.bad" for f in fs)
+
+
+def test_lock_tenancy_monitor_and_res_are_guarded():
+    """tenancy.py registry: _monitor and per-tenant res are guarded fields."""
+    fs = lint("src/repro/serve/tenancy.py", """\
+        class MTR:
+            def bad(self, tenant):
+                self._monitor.forget(tenant.name)
+                return tenant.res
+            def good(self, tenant):
+                with self._cv:
+                    self._monitor.forget(tenant.name)
+                    return tenant.res
+        """)
+    fs = rules_of(fs, "lock-discipline")
+    # bad(): _monitor read + forget() call + res read
+    assert len(fs) == 3 and all(f.qualname == "MTR.bad" for f in fs)
+
+
 def test_live_stats_subscript_outside_serve_fires():
     fs = lint(ORCH, """\
         def read(rt):

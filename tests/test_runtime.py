@@ -1,18 +1,20 @@
-"""Fault-tolerance runtime: checkpoint roundtrip, restart, straggler, elastic."""
+"""Training-side runtime: checkpoint roundtrip, preemption, data pipeline.
+
+(Straggler/restart coverage moved to ``tests/test_faults.py`` with the
+code — ``StragglerMonitor``/``run_with_restarts`` now live in
+``repro.serve.faults``; ``HeartbeatTracker`` and ``runtime/elastic.py``
+were deleted as unwired seed code.)
+"""
 import os
 import signal
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.pipeline import DataConfig, DataIterator, make_batch
 from repro.runtime.checkpoint import CheckpointManager
-from repro.runtime.elastic import largest_dp, rebuild_mesh, rescale_batch
-from repro.runtime.fault_tolerance import (HeartbeatTracker, PreemptionHandler,
-                                           StragglerMonitor, run_with_restarts)
+from repro.runtime.fault_tolerance import PreemptionHandler
 
 
 def _state(seed=0):
@@ -58,45 +60,6 @@ def test_checkpoint_atomicity_no_tmp_left(tmp_path):
     assert not any(d.endswith(".tmp") for d in os.listdir(tmp_path))
 
 
-def test_restart_supervisor_retries():
-    attempts = []
-
-    def loop():
-        attempts.append(1)
-        if len(attempts) < 3:
-            raise RuntimeError("simulated node failure")
-        return "done"
-
-    restarts = []
-    out = run_with_restarts(loop, max_restarts=5,
-                            on_restart=lambda n, e: restarts.append(n))
-    assert out == "done" and len(attempts) == 3 and restarts == [1, 2]
-
-
-def test_restart_supervisor_gives_up():
-    def loop():
-        raise RuntimeError("hard failure")
-    with pytest.raises(RuntimeError):
-        run_with_restarts(loop, max_restarts=2)
-
-
-def test_straggler_monitor():
-    mon = StragglerMonitor(alpha=1.0, threshold=2.0)
-    for host in ("h0", "h1", "h2", "h3"):
-        mon.record(host, 1.0)
-    assert mon.stragglers() == []
-    assert mon.record("h3", 5.0) is True
-    assert mon.stragglers() == ["h3"]
-
-
-def test_heartbeat_tracker():
-    hb = HeartbeatTracker(timeout=10.0)
-    now = time.time()
-    hb.beat("h0", now)
-    hb.beat("h1", now - 100.0)
-    assert hb.dead_hosts(now) == ["h1"]
-
-
 def test_preemption_handler():
     h = PreemptionHandler().install()
     try:
@@ -105,18 +68,6 @@ def test_preemption_handler():
         assert h.preempted is True
     finally:
         h.uninstall()
-
-
-def test_elastic_largest_dp_and_rescale():
-    assert largest_dp(256, 16) == 16
-    assert largest_dp(255, 16) == 8       # lost a node -> shrink to pow2
-    assert largest_dp(17, 16) == 1
-    assert rescale_batch(256, 16, 8) == 128
-
-
-def test_elastic_rebuild_mesh_single_device():
-    mesh = rebuild_mesh(jax.devices(), model_size=1)
-    assert mesh.shape["model"] == 1 and mesh.shape["data"] == 1
 
 
 def test_data_pipeline_deterministic_and_resumable():
