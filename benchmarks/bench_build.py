@@ -1,0 +1,169 @@
+"""Host vs on-device H-matrix construction (`repro.core.build_device`).
+
+Three measurements:
+
+* **Structural build** — ``build_hmatrix`` (eager host pipeline: Morton
+  encode/sort dispatched op by op, per-level NumPy frontier loop) vs
+  ``build_hmatrix_device`` (ONE fused jitted program + a single packed
+  metadata fetch) at the benchmark config.  Records median + min wall
+  times over ``reps`` interleaved warm runs and the device/host speedup
+  — the paper's construction-on-many-core claim (Algs. 1/4/6/7), and
+  this suite's acceptance gate (>= 5x at N=16384).
+* **Factor assembly** — ``compute_factors`` vs ``compute_factors_device``
+  (both are O(levels) batched ACA launches; the device path gathers
+  cluster points on device via the ``kernels/batched_aca`` construction
+  entry point), plus the one-launch batched dense-leaf evaluation.
+* **Tenant onboarding** — ``MultiTenantRuntime.add_tenant`` from RAW
+  coordinates while another tenant is under traffic: records the
+  on-device build time (``stats()["onboard_s"]``) and the
+  coords-to-first-response latency.
+
+The structural numbers are dispatch-bound on CPU (the JSON carries
+``backend``); the *claim* — construction collapses to a handful of wide
+launches instead of O(levels * ops) eager dispatches — is scale-free.
+JSON lands in ``results/build/``.
+
+    PYTHONPATH=src python -m benchmarks.bench_build [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "build")
+
+
+def _times(fn, reps: int) -> dict:
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return {"med_s": ts[len(ts) // 2], "min_s": ts[0]}
+
+
+def _structure(pts, c_leaf, eta, reps) -> dict:
+    from repro.core import build_hmatrix, build_hmatrix_device
+
+    host = lambda: build_hmatrix(pts, c_leaf=c_leaf, eta=eta)
+    dev = lambda: build_hmatrix_device(pts, c_leaf=c_leaf, eta=eta)
+    host(), dev()                               # warm both compile caches
+    th, td = [], []
+    for _ in range(reps):                       # interleave: same noise floor
+        t0 = time.perf_counter(); host(); th.append(time.perf_counter() - t0)
+        t0 = time.perf_counter(); dev(); td.append(time.perf_counter() - t0)
+    th.sort(), td.sort()
+    med = lambda t: t[len(t) // 2]
+    return {"host": {"med_s": med(th), "min_s": th[0]},
+            "device": {"med_s": med(td), "min_s": td[0]},
+            "speedup_med": med(th) / med(td),
+            "speedup_min": th[0] / td[0]}
+
+
+def _factors(pts, c_leaf, eta, k, reps) -> dict:
+    import jax
+    from repro.core import (build_hmatrix, compute_factors,
+                            compute_factors_device, eval_dense_leaves)
+
+    hm = build_hmatrix(pts, c_leaf=c_leaf, eta=eta, k=k)
+    host = lambda: jax.block_until_ready(
+        compute_factors(hm.tree, hm.plan, hm.kernel, k))
+    dev = lambda: jax.block_until_ready(
+        compute_factors_device(hm.tree, hm.plan, "gaussian", k))
+    dense = lambda: jax.block_until_ready(eval_dense_leaves(hm))
+    host(), dev(), dense()
+    return {"host": _times(host, reps), "device": _times(dev, reps),
+            "dense_leaves": _times(dense, reps),
+            "aca_levels": {str(l): int(b.shape[0])
+                           for l, b in hm.plan.aca_levels.items()},
+            "num_dense_blocks": hm.plan.num_dense_blocks}
+
+
+def _onboarding(pts, c_leaf, k, max_batch) -> dict:
+    """Hot onboarding: add a coords-built tenant while one is serving."""
+    from repro.serve.tenancy import MultiTenantRuntime, apply_tenant
+
+    n = pts.shape[0]
+    rng = np.random.RandomState(0)
+    queries = [rng.randn(n).astype(np.float32) for _ in range(4 * max_batch)]
+    base = apply_tenant(np.asarray(pts),
+                        build={"c_leaf": c_leaf, "k": k}, max_batch=max_batch)
+    with MultiTenantRuntime() as mtr:
+        h0 = mtr.add_tenant("base", base)
+        mtr.precompile()
+        futures = [h0.submit(q) for q in queries]
+        mtr.flush("base")
+        t0 = time.perf_counter()                # coords -> first response
+        spec = apply_tenant(np.asarray(pts), build={"c_leaf": c_leaf, "k": k},
+                            max_batch=max_batch)
+        h1 = mtr.add_tenant("hot", spec)
+        f = h1.submit(queries[0])
+        mtr.flush("hot")
+        f.result()
+        first_response_s = time.perf_counter() - t0
+        for fut in futures:
+            fut.result()
+        onboard = mtr.stats()["onboard_s"]
+    return {"build_s": onboard["hot"], "first_response_s": first_response_s}
+
+
+def run(n: int = 16384, c_leaf: int = 256, k: int = 16, eta: float = 1.5,
+        d: int = 2, max_batch: int = 16, reps: int = 15,
+        smoke: bool = False) -> dict:
+    import jax
+    from repro.core import halton
+
+    if smoke:
+        n, c_leaf, reps, max_batch = 1024, 128, 3, 4
+
+    pts = halton(n, d) * 32.0
+    structure = _structure(pts, c_leaf, eta, reps)
+    factors = _factors(pts, c_leaf, eta, k, max(3, reps // 3))
+    onboarding = _onboarding(pts, c_leaf, k, max_batch)
+
+    emit(f"build_host_n{n}", structure["host"]["med_s"],
+         f"min={structure['host']['min_s'] * 1e3:.2f}ms")
+    emit(f"build_device_n{n}", structure["device"]["med_s"],
+         f"speedup_med={structure['speedup_med']:.2f}x "
+         f"speedup_min={structure['speedup_min']:.2f}x")
+    emit(f"factors_device_n{n}", factors["device"]["med_s"],
+         f"host={factors['host']['med_s'] * 1e3:.1f}ms")
+    emit(f"onboard_n{n}", onboarding["first_response_s"],
+         f"build={onboarding['build_s'] * 1e3:.1f}ms")
+
+    record = {
+        "config": {"n": n, "c_leaf": c_leaf, "k": k, "eta": eta, "d": d,
+                   "max_batch": max_batch, "reps": reps, "smoke": smoke},
+        "backend": jax.default_backend(),
+        "structure": structure,
+        "factors": factors,
+        "onboarding": onboarding,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "build.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {os.path.relpath(out)}")
+    if not smoke and structure["speedup_med"] < 5.0:
+        print(f"# WARNING: device structural speedup "
+              f"{structure['speedup_med']:.2f}x below the 5x gate")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes: dispatch check for CI")
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

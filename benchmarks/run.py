@@ -25,9 +25,10 @@ import sys
 import time
 import traceback
 
-from . import (bench_batching, bench_chaos, bench_compare, bench_complexity,
-               bench_convergence, bench_matmat, bench_roofline, bench_serve,
-               bench_shard, bench_solve, bench_tenancy)
+from . import (bench_batching, bench_build, bench_chaos, bench_compare,
+               bench_complexity, bench_convergence, bench_matmat,
+               bench_roofline, bench_serve, bench_shard, bench_solve,
+               bench_tenancy)
 
 
 def _suites(args) -> list:
@@ -41,6 +42,7 @@ def _suites(args) -> list:
             ("solve", lambda: bench_solve.run(n=1024, domain=16.0,
                                               c_leaf=128)),
             ("shard", lambda: bench_shard.run(n=512, r=8)),
+            ("build", lambda: bench_build.run(smoke=True)),
             ("serve", lambda: bench_serve.run(smoke=True)),
             ("tenancy", lambda: bench_tenancy.run(smoke=True)),
             ("chaos", lambda: bench_chaos.run(smoke=True)),
@@ -57,6 +59,8 @@ def _suites(args) -> list:
          else bench_solve.run()),
         ("shard", lambda: bench_shard.run(n=2048 if args.quick else 8192,
                                           r=16 if args.quick else 64)),
+        ("build", lambda: bench_build.run(n=4096, reps=9) if args.quick
+         else bench_build.run()),
         ("serve", lambda: bench_serve.run(smoke=True) if args.quick
          else bench_serve.run()),
         ("tenancy", lambda: bench_tenancy.run(smoke=True) if args.quick

@@ -13,8 +13,12 @@ And every public dispatcher in ``ops.py`` must degrade gracefully:
   when the working set exceeds the budget — Pallas tiles that overflow
   VMEM fail at compile time on real hardware, so the dispatcher, not the
   caller, owns the decision),
-* the package is exercised by a kernel-vs-ref test: its name appears in at
-  least one ``tests/*.py``.
+* every ``*_ref`` oracle a dispatcher references is *defined* in the
+  package's ``ref.py`` (a fallback that points at nothing is a contract
+  violation waiting for the first over-budget shape),
+* every public dispatcher is exercised *by name* in at least one
+  ``tests/*.py`` (and the package name too) — a package-level mention
+  does not cover a new entry point added to an existing ops.py.
 
 This is a project rule (it checks tree structure, not one file), so inline
 suppressions do not apply — fix the package or baseline with justification.
@@ -37,13 +41,34 @@ def _public_functions(tree: ast.AST):
             yield node
 
 
-def _references_ref_fallback(fn: ast.AST) -> bool:
+def _referenced_ref_names(fn: ast.AST) -> set:
+    """All ``*_ref`` identifiers a dispatcher body touches.
+
+    ``force_ref`` (the global kill-switch from ``repro.kernels``) is not an
+    oracle — it is excluded so a dispatcher cannot satisfy the fallback
+    contract by checking the env flag alone.
+    """
+    names = set()
     for node in ast.walk(fn):
         if isinstance(node, ast.Name) and node.id.endswith("_ref"):
-            return True
-        if isinstance(node, ast.Attribute) and node.attr.endswith("_ref"):
-            return True
-    return False
+            names.add(node.id)
+        elif isinstance(node, ast.Attribute) and node.attr.endswith("_ref"):
+            names.add(node.attr)
+    names.discard("force_ref")
+    return names
+
+
+def _ref_definitions(pkg: Path) -> set:
+    """Top-level function names defined in the package's ref.py."""
+    ref = pkg / "ref.py"
+    if not ref.is_file():
+        return set()
+    try:
+        tree = ast.parse(ref.read_text())
+    except SyntaxError:
+        return set()
+    return {node.name for node in tree.body
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))}
 
 
 def _has_vmem_budget(tree: ast.AST) -> bool:
@@ -84,8 +109,10 @@ def kernel_contract_rule(root: Path) -> list:
                                         pkg.name, "ops.py does not parse"))
                 continue
             has_budget = _has_vmem_budget(tree)
+            ref_defs = _ref_definitions(pkg)
             for fn in _public_functions(tree):
-                if not _references_ref_fallback(fn):
+                refs = _referenced_ref_names(fn)
+                if not refs:
                     findings.append(Finding(
                         RULE, f"{rel}/ops.py", fn.lineno, fn.name,
                         "dispatcher has no *_ref fallback branch — an "
@@ -96,6 +123,18 @@ def kernel_contract_rule(root: Path) -> list:
                         RULE, f"{rel}/ops.py", fn.lineno, fn.name,
                         "ops.py defines no VMEM_BUDGET constant to size "
                         "the fallback decision"))
+                for name in sorted(refs - ref_defs):
+                    findings.append(Finding(
+                        RULE, f"{rel}/ops.py", fn.lineno, fn.name,
+                        f"dispatcher references oracle '{name}' that the "
+                        f"package's ref.py does not define — the reference "
+                        f"implementation must ship with the entry point"))
+                if fn.name not in test_blob:
+                    findings.append(Finding(
+                        RULE, f"{rel}/ops.py", fn.lineno, fn.name,
+                        f"public dispatcher '{fn.name}' is not exercised "
+                        f"by name in any tests/*.py — each entry point "
+                        f"needs its own kernel-vs-ref test"))
         if pkg.name not in test_blob:
             findings.append(Finding(
                 RULE, rel, 1, pkg.name,

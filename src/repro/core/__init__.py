@@ -21,6 +21,9 @@ from .aca import aca_fixed_rank, batched_aca, aca_adaptive
 from .hmatrix import (HMatrix, build_hmatrix, make_apply, make_matvec,
                       dense_matvec_oracle, compute_factors, diagonal_blocks,
                       apply_in_tree_order)
+from .build_device import (BuildReport, build_hmatrix_device,
+                           build_hmatrix_device_report,
+                           compute_factors_device, eval_dense_leaves)
 
 __all__ = [
     "halton", "get_kernel", "dense_kernel_matrix", "gaussian_kernel",
@@ -33,4 +36,6 @@ __all__ = [
     "HMatrix", "build_hmatrix", "make_apply", "make_matvec",
     "dense_matvec_oracle", "compute_factors", "diagonal_blocks",
     "apply_in_tree_order",
+    "BuildReport", "build_hmatrix_device", "build_hmatrix_device_report",
+    "compute_factors_device", "eval_dense_leaves",
 ]

@@ -71,7 +71,10 @@ def _admissible_np(a_min, a_max, b_min, b_max, eta):
     gap_ab = np.maximum(0.0, a_min - b_max)
     gap_ba = np.maximum(0.0, b_min - a_max)
     dist = np.sqrt((gap_ab ** 2 + gap_ba ** 2).sum(-1))
-    return np.minimum(d_a, d_b) <= eta * dist
+    # eta stays f32 like the jnp path's weak-typed scalar: a python-float
+    # eta would promote the comparison to f64 under pre-NEP50 NumPy and
+    # could flip borderline blocks vs the device traversal
+    return np.minimum(d_a, d_b) <= np.float32(eta) * dist
 
 
 def build_block_tree(tree: ClusterTree, eta: float = 1.5,

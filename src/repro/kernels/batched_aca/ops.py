@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.kernels import force_ref
 
 from .kernel import batched_aca_t, batched_lowrank_matmat_t
-from .ref import batched_aca_ref, batched_lowrank_matmat_ref
+from .ref import (batched_aca_level_ref, batched_aca_ref,
+                  batched_lowrank_matmat_ref)
 
 # Conservative VMEM budget for one program's working set (bytes).
 VMEM_BUDGET = 8 * 1024 * 1024
@@ -57,6 +58,49 @@ def batched_aca_pallas(rows: jnp.ndarray, cols: jnp.ndarray,
         return batched_aca_ref(rows, cols, kernel_name, k)
     rows_t = jnp.swapaxes(rows, -1, -2)
     cols_t = jnp.swapaxes(cols, -1, -2)
+    return batched_aca_t(rows_t, cols_t, kernel_name, k)
+
+
+def batched_aca_level(points: jnp.ndarray, row_ids: jnp.ndarray,
+                      col_ids: jnp.ndarray, level: int,
+                      kernel_name: str, k: int):
+    """Construction entry point: factor ONE admissible level group.
+
+    The device-build pipeline (``core.build_device``) calls this once per
+    level — the cluster-point gather happens here, device-side, from the
+    tree-ordered point array, so factor assembly is O(levels) launches
+    with no host-staged coordinate batches.
+
+    Parameters
+    ----------
+    points : jnp.ndarray, shape (n_pad, d)
+        Tree-ordered (Morton-sorted, padded) coordinates.
+    row_ids, col_ids : jnp.ndarray, shape (B,)
+        Row/column cluster ids of the level group's admissible blocks.
+    level : int
+        Tree level (cluster ``i`` spans rows ``[i*m, (i+1)*m)`` with
+        ``m = n_pad >> level``).
+    kernel_name : str
+        Registered kernel function ("gaussian", "matern").
+    k : int
+        Fixed ACA rank.
+
+    Returns
+    -------
+    U : jnp.ndarray, shape (B, m, k)
+    V : jnp.ndarray, shape (B, m, k)
+        Low-rank factors per block.  Level groups whose per-block working
+        set exceeds ``VMEM_BUDGET`` (coarse levels — the paper's
+        ``bs_ACA`` heuristic) fall back to ``batched_aca_level_ref``.
+    """
+    n_pad, d = points.shape
+    m = n_pad >> level
+    if force_ref() or _vmem_bytes(m, m, d, k) > VMEM_BUDGET:
+        return batched_aca_level_ref(points, row_ids, col_ids, level,
+                                     kernel_name, k)
+    pts = points.reshape(1 << level, m, d)
+    rows_t = jnp.swapaxes(pts[row_ids], -1, -2)
+    cols_t = jnp.swapaxes(pts[col_ids], -1, -2)
     return batched_aca_t(rows_t, cols_t, kernel_name, k)
 
 

@@ -12,6 +12,20 @@ def batched_aca_ref(rows: jnp.ndarray, cols: jnp.ndarray, kernel_name: str, k: i
     return batched_aca(rows, cols, get_kernel(kernel_name), k)
 
 
+def batched_aca_level_ref(points: jnp.ndarray, row_ids: jnp.ndarray,
+                          col_ids: jnp.ndarray, level: int,
+                          kernel_name: str, k: int):
+    """Construction-entry oracle: gather one level group's cluster points
+    from the tree-ordered array, then factor through the SAME shared
+    ``batched_aca`` executable the host driver uses (``points``:
+    (n_pad, d); ``row_ids``/``col_ids``: (B,) cluster ids at ``level``) —
+    the gather is exact, so the factors are bit-identical to the host's
+    ``compute_factors`` for the same blocks."""
+    m = points.shape[0] >> level
+    pts = points.reshape(1 << level, m, -1)
+    return batched_aca(pts[row_ids], pts[col_ids], get_kernel(kernel_name), k)
+
+
 def batched_lowrank_matmat_ref(u: jnp.ndarray, v: jnp.ndarray,
                                x: jnp.ndarray) -> jnp.ndarray:
     """u: (B, m, k), v: (B, n, k), x: (B, n, R) -> U (V^T X): (B, m, R)."""

@@ -102,6 +102,11 @@ class TenantSpec:
     shed_above : int, optional
         Per-tenant load-shedding admission budget: ``submit`` raises
         ``OverloadedError`` at this queue depth instead of blocking.
+    build_s : float, optional
+        Construction wall time when this tenant was onboarded from raw
+        coordinates (``apply_tenant(coords)`` / ``solve_tenant(coords)``
+        record the on-device build here); surfaced as ``onboard_s`` in
+        the per-tenant and runtime ``stats()``.
     """
 
     n: int
@@ -114,6 +119,7 @@ class TenantSpec:
     fallback: Callable | None = None
     resilience: ResiliencePolicy | None = None
     shed_above: int | None = None
+    build_s: float | None = None
 
     def __post_init__(self):
         if self.weight <= 0:
@@ -127,16 +133,40 @@ class TenantSpec:
                              f"could never be admitted")
 
 
+def _onboard(hm, build: dict | None, spec_kw: dict):
+    """Accept an assembled H-matrix OR raw coordinates.
+
+    Raw coordinates (anything without a ``.plan`` — an ``(n, d)`` array)
+    are built ON DEVICE via ``core.build_device.build_hmatrix_device``
+    with the keyword options in ``build`` (kernel, k, c_leaf, eta,
+    precompute, chaos, ...), and the construction wall time is recorded
+    into ``spec_kw["build_s"]`` so the runtime can surface onboarding
+    latency in ``stats()``.  This is the millisecond-onboarding path: a
+    tenant goes from coordinates to serving without a host-side build.
+    """
+    if hasattr(hm, "plan"):
+        return hm
+    from repro.core.build_device import build_hmatrix_device_report
+    hm, report = build_hmatrix_device_report(hm, **(build or {}))
+    spec_kw.setdefault("build_s", report.total_s)
+    return hm
+
+
 def apply_tenant(hm, max_batch: int = 64, use_pallas: bool = False,
-                 mesh=None, **spec_kw) -> TenantSpec:
+                 mesh=None, build: dict | None = None,
+                 **spec_kw) -> TenantSpec:
     """Spec for an apply-backed tenant (``Z = H @ X`` query traffic).
 
-    Builds the batched executor via ``core.hmatrix.make_apply`` (sharded
-    over ``mesh`` when given) and rounds ``max_batch`` up to the mesh
-    device count via ``hshard.pad_panel_width``.
+    ``hm`` is an assembled H-matrix, or raw ``(n, d)`` coordinates to
+    onboard via the on-device build (options in ``build``; construction
+    time lands in ``TenantSpec.build_s``).  Builds the batched executor
+    via ``core.hmatrix.make_apply`` (sharded over ``mesh`` when given)
+    and rounds ``max_batch`` up to the mesh device count via
+    ``hshard.pad_panel_width``.
     """
     from repro.core.hmatrix import make_apply
     from repro.parallel.hshard import mesh_device_count, pad_panel_width
+    hm = _onboard(hm, build, spec_kw)
     n_dev = mesh_device_count(mesh)
     # the reference (non-Pallas) executor doubles as the NaN/Inf fallback;
     # closures are cheap — nothing compiles until a degraded panel needs it
@@ -155,12 +185,15 @@ def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
     """Spec for a solve-backed tenant (regression-fit traffic).
 
     One fused PCG ``while_loop`` launch per panel (``solve.make_solver``).
-    Pass ``info_log`` (a bounded ``deque``) to retain the per-panel LAZY
-    ``SolveInfo`` records; by default they are dropped unread (costs no
-    device sync either way).
+    ``hm`` may be raw ``(n, d)`` coordinates (see :func:`apply_tenant` —
+    same on-device onboarding path, options via ``build=`` in
+    ``spec_kw``).  Pass ``info_log`` (a bounded ``deque``) to retain the
+    per-panel LAZY ``SolveInfo`` records; by default they are dropped
+    unread (costs no device sync either way).
     """
     from repro.parallel.hshard import mesh_device_count, pad_panel_width
     from repro.solve import make_solver
+    hm = _onboard(hm, spec_kw.pop("build", None), spec_kw)
     n_dev = mesh_device_count(mesh)
     solve = make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
                         precondition=precondition, use_pallas=use_pallas,
@@ -225,6 +258,7 @@ class _Tenant:
                                    "breaker_state": ("disabled"
                                                      if self.res is None
                                                      else "closed"),
+                                   "onboard_s": spec.build_s,
                                    "events": deque(maxlen=256)})
 
     def drained(self) -> bool:
@@ -354,7 +388,8 @@ class MultiTenantRuntime:
                              "launch_order": deque(maxlen=2048),
                              "tenants_added": 0, "tenants_removed": 0,
                              "retries": 0, "panel_failures": 0,
-                             "shed_requests": 0, "straggler_tenants": []})
+                             "shed_requests": 0, "straggler_tenants": [],
+                             "onboard_s": {}})
         self._closing = False
         self._closed = False
         self._thread: threading.Thread | None = None
@@ -391,6 +426,10 @@ class MultiTenantRuntime:
             tenant.lane._on_fallback = self._make_on_fallback(tenant)
             self._tenants[name] = tenant
             self.stats["tenants_added"] += 1
+            if spec.build_s is not None:
+                # onboarding latency rollup: tenants built from raw
+                # coordinates report their construction wall time
+                self.stats["onboard_s"][name] = float(spec.build_s)
             self._cv.notify_all()
             return TenantHandle(self, tenant)
 

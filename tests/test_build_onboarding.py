@@ -1,0 +1,162 @@
+"""Hot tenant onboarding from raw coordinates + chaos-contained builds.
+
+``apply_tenant(coords, build={...})`` takes a tenant from an ``(n, d)``
+coordinate array to serving through the on-device build
+(``core.build_device``).  Pinned here:
+
+* a coords-onboarded tenant answers BIT-IDENTICALLY to a tenant wrapping
+  a prebuilt H-matrix, through the same runtime at the same panel widths
+  (same compiled executables — the only fair bitwise comparison);
+* onboarding mid-traffic leaves the existing tenant's futures untouched;
+* construction latency surfaces as ``onboard_s`` in per-tenant and
+  runtime stats;
+* the serving stack's chaos containment extends to construction: a
+  transient fault on a build launch is retried with backoff, a
+  NaN-poisoned launch is answered with a plain relaunch, and exhausted
+  retries surface the injected fault — with exact results whenever the
+  build survives.
+
+Chaos schedules are deterministic per (seed, stage-name) stream:
+``transient=0.6:1,seed=3`` makes the ``build:plan`` stage draw one fault
+then succeed on the retry, every run.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_hmatrix, build_hmatrix_device_report, halton
+from repro.serve.faults import InjectedFault
+from repro.serve.tenancy import MultiTenantRuntime, apply_tenant
+
+N, D, C_LEAF, K, MB = 768, 2, 128, 8, 4
+BUILD = {"c_leaf": C_LEAF, "k": K}
+RETRY_CHAOS = "transient=0.6:1,seed=3"      # build:plan: one fault, one retry
+
+
+def _pts():
+    return np.asarray(halton(N, D)) * 8.0
+
+
+def _queries(count, seed=0):
+    r = np.random.RandomState(seed)
+    return [r.randn(N).astype(np.float32) for _ in range(count)]
+
+
+def _prebuilt_spec(pts):
+    return apply_tenant(build_hmatrix(pts, c_leaf=C_LEAF, k=K), max_batch=MB)
+
+
+# ---------------------------------------------------------------------------
+# onboarding correctness + stats
+# ---------------------------------------------------------------------------
+
+
+def test_onboarded_tenant_bit_identical_to_prebuilt():
+    pts = _pts()
+    qs = _queries(3 * MB)
+    with MultiTenantRuntime() as mtr:
+        ha = mtr.add_tenant("prebuilt", _prebuilt_spec(pts))
+        hb = mtr.add_tenant("coords", apply_tenant(pts, build=BUILD,
+                                                   max_batch=MB))
+        fa = [ha.submit(q) for q in qs]
+        fb = [hb.submit(q) for q in qs]
+        mtr.drain()
+        for x, y in zip(fa, fb):
+            np.testing.assert_array_equal(np.asarray(x.result()),
+                                          np.asarray(y.result()))
+        onboard = mtr.stats()["onboard_s"]
+        assert set(onboard) == {"coords"} and onboard["coords"] > 0
+        assert ha.stats()["onboard_s"] is None
+        assert hb.stats()["onboard_s"] == onboard["coords"]
+
+
+def test_hot_onboarding_leaves_existing_tenant_undisturbed():
+    """Add a coords tenant while another is mid-traffic: the existing
+    tenant's futures resolve exactly as in an undisturbed run, and the
+    new tenant's first response matches a prebuilt tenant served at the
+    same panel width."""
+    pts = _pts()
+    qs = _queries(4 * MB)
+    probe = _queries(1, seed=7)[0]
+
+    with MultiTenantRuntime() as mtr:            # undisturbed oracle run
+        h = mtr.add_tenant("base", _prebuilt_spec(pts))
+        futs = [h.submit(q) for q in qs]
+        mtr.drain()
+        expected = [np.asarray(f.result()) for f in futs]
+    with MultiTenantRuntime() as mtr:            # same width-1 executable
+        h = mtr.add_tenant("solo", _prebuilt_spec(pts))
+        f = h.submit(probe)
+        mtr.drain()
+        expected_first = np.asarray(f.result())
+
+    with MultiTenantRuntime() as mtr:
+        h = mtr.add_tenant("base", _prebuilt_spec(pts))
+        futs = [h.submit(q) for q in qs]
+        hot = mtr.add_tenant("hot", apply_tenant(pts, build=BUILD,
+                                                 max_batch=MB))
+        f_hot = hot.submit(probe)
+        mtr.drain()
+        for f, e in zip(futs, expected):
+            np.testing.assert_array_equal(np.asarray(f.result()), e)
+        np.testing.assert_array_equal(np.asarray(f_hot.result()),
+                                      expected_first)
+        assert "hot" in mtr.stats()["onboard_s"]
+
+
+# ---------------------------------------------------------------------------
+# chaos containment on construction launches
+# ---------------------------------------------------------------------------
+
+
+def test_transient_build_fault_retried_with_exact_result():
+    pts = _pts()
+    ref, _ = build_hmatrix_device_report(pts, c_leaf=C_LEAF, k=K)
+    hm, rep = build_hmatrix_device_report(pts, c_leaf=C_LEAF, k=K,
+                                          chaos=RETRY_CHAOS)
+    assert rep.retries == 1
+    assert rep.faults_injected.get("transient") == 1
+    assert rep.fallback_launches == 0
+    np.testing.assert_array_equal(np.asarray(hm.tree.perm),
+                                  np.asarray(ref.tree.perm))
+    np.testing.assert_array_equal(hm.plan.dense_blocks,
+                                  ref.plan.dense_blocks)
+    for lvl, blocks in ref.plan.aca_levels.items():
+        np.testing.assert_array_equal(hm.plan.aca_levels[lvl], blocks)
+
+
+def test_nan_poisoned_build_launch_relaunched():
+    pts = _pts()
+    ref, _ = build_hmatrix_device_report(pts, c_leaf=C_LEAF, k=K)
+    hm, rep = build_hmatrix_device_report(pts, c_leaf=C_LEAF, k=K,
+                                          chaos="nan=1.0")
+    assert rep.fallback_launches >= 1
+    assert rep.faults_injected.get("nan", 0) >= 1
+    np.testing.assert_array_equal(np.asarray(hm.tree.points),
+                                  np.asarray(ref.tree.points))
+    np.testing.assert_array_equal(hm.plan.dense_blocks,
+                                  ref.plan.dense_blocks)
+
+
+def test_exhausted_build_retries_surface_the_fault():
+    with pytest.raises(InjectedFault):
+        build_hmatrix_device_report(_pts(), c_leaf=C_LEAF, k=K,
+                                    chaos="transient=1.0:4,seed=0")
+
+
+def test_onboarding_under_build_chaos_serves_exact():
+    """A tenant whose BUILD ran under transient injection (contained by
+    retry) serves bit-identically to a chaos-free prebuilt tenant."""
+    pts = _pts()
+    qs = _queries(2 * MB)
+    chaotic = apply_tenant(pts, build=dict(BUILD, chaos=RETRY_CHAOS),
+                           max_batch=MB)
+    with MultiTenantRuntime() as mtr:
+        ha = mtr.add_tenant("clean", _prebuilt_spec(pts))
+        hb = mtr.add_tenant("survivor", chaotic)
+        fa = [ha.submit(q) for q in qs]
+        fb = [hb.submit(q) for q in qs]
+        mtr.drain()
+        for x, y in zip(fa, fb):
+            np.testing.assert_array_equal(np.asarray(x.result()),
+                                          np.asarray(y.result()))
+        assert mtr.stats()["onboard_s"]["survivor"] > 0

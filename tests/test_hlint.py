@@ -428,6 +428,72 @@ def test_kernel_contract_fallback_without_budget_fires(tmp_path):
     assert len(fs) == 1 and "VMEM_BUDGET" in fs[0].message
 
 
+def test_kernel_contract_undefined_oracle_fires(tmp_path):
+    # dispatcher names an oracle ref.py never defines -> must fire
+    pkg = tmp_path / "src" / "repro" / "kernels" / "phantom"
+    pkg.mkdir(parents=True)
+    (pkg / "kernel.py").write_text("def phantom_t(x):\n    return x\n")
+    (pkg / "ref.py").write_text("def other_ref(x):\n    return x\n")
+    (pkg / "ops.py").write_text(
+        "VMEM_BUDGET = 1\n"
+        "def phantom(x):\n"
+        "    return phantom_ref(x)\n")
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests" / "test_phantom.py").write_text("# phantom\n")
+    fs = rules_kernel_contract.kernel_contract_rule(tmp_path)
+    assert len(fs) == 1, [f.format() for f in fs]
+    assert "'phantom_ref'" in fs[0].message
+    assert "ref.py does not define" in fs[0].message
+    # defining the oracle clears it -> must not fire
+    (pkg / "ref.py").write_text("def phantom_ref(x):\n    return x\n")
+    assert rules_kernel_contract.kernel_contract_rule(tmp_path) == []
+
+
+def test_kernel_contract_force_ref_alone_is_not_an_oracle(tmp_path):
+    # the env kill-switch ends in _ref but is not a fallback branch
+    pkg = tmp_path / "src" / "repro" / "kernels" / "switchy"
+    pkg.mkdir(parents=True)
+    (pkg / "kernel.py").write_text("def switchy_t(x):\n    return x\n")
+    (pkg / "ref.py").write_text("def switchy_ref(x):\n    return x\n")
+    (pkg / "ops.py").write_text(
+        "VMEM_BUDGET = 1\n"
+        "from repro.kernels import force_ref\n"
+        "def switchy(x):\n"
+        "    if force_ref():\n"
+        "        return x\n"
+        "    return x\n")
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests" / "test_switchy.py").write_text("# switchy\n")
+    fs = rules_kernel_contract.kernel_contract_rule(tmp_path)
+    assert len(fs) == 1 and "no *_ref fallback" in fs[0].message
+
+
+def test_kernel_contract_untested_entry_point_fires(tmp_path):
+    # a package-level tests/ mention does not cover a NEW entry point
+    pkg = tmp_path / "src" / "repro" / "kernels" / "twoface"
+    pkg.mkdir(parents=True)
+    (pkg / "kernel.py").write_text("def twoface_t(x):\n    return x\n")
+    (pkg / "ref.py").write_text(
+        "def twoface_ref(x):\n    return x\n"
+        "def twoface_level_ref(x):\n    return x\n")
+    (pkg / "ops.py").write_text(
+        "VMEM_BUDGET = 1\n"
+        "def twoface(x):\n"
+        "    return twoface_ref(x)\n"
+        "def twoface_level(x):\n"
+        "    return twoface_level_ref(x)\n")
+    (tmp_path / "tests").mkdir()
+    (tmp_path / "tests" / "test_twoface.py").write_text("# twoface only\n")
+    fs = rules_kernel_contract.kernel_contract_rule(tmp_path)
+    assert len(fs) == 1, [f.format() for f in fs]
+    assert "twoface_level" in fs[0].message
+    assert "not exercised by name" in fs[0].message
+    # mentioning the new entry point clears it -> must not fire
+    (tmp_path / "tests" / "test_twoface.py").write_text(
+        "# twoface and twoface_level\n")
+    assert rules_kernel_contract.kernel_contract_rule(tmp_path) == []
+
+
 # ---------------------------------------------------------------------------
 # jit-hygiene
 # ---------------------------------------------------------------------------
