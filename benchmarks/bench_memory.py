@@ -1,0 +1,213 @@
+"""Factor-store memory footprint: flat vs recompressed, and the eviction tier.
+
+Two measurements over :class:`repro.core.factor_store.FactorStore`:
+
+* **flat vs recompressed** — bytes-per-tenant at the paper problem
+  (gaussian, eta=1.5, k=16; N=16384 at the convergence leaf size) before
+  and after tol=1e-2 algebraic recompression, the implied
+  tenants-per-device at a nominal HBM size, and the apply error of the
+  recompressed store against the uncompressed one (must stay within the
+  requested tolerance — a byte win that moves the answers is a bug, not
+  a win).
+* **eviction tier bit-identity** — 10:1 skewed traffic over store-backed
+  tenants in one :class:`~repro.serve.tenancy.MultiTenantRuntime` under a
+  device-bytes budget sized to force at least one LRU spill; every
+  returned panel must be bit-identical to the same traffic served with no
+  budget, and the spill/reload/``reload_s`` stats land in the record.
+
+On CPU the byte counts are exact (array metadata, no timing involved);
+the eviction run exercises the real spill → reserve → reload path of the
+scheduler thread.  JSON lands in ``results/memory/``.
+
+    PYTHONPATH=src python -m benchmarks.bench_memory [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from .common import emit
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "memory")
+
+# nominal accelerator HBM for the tenants-per-device projection (16 GiB,
+# the smallest common inference-part size; scale linearly for larger parts)
+HBM_BYTES = 16 * 2 ** 30
+
+
+def _footprint(n, k, c_leaf, eta, tol) -> dict:
+    """Flat vs recompressed bytes + apply error for one tenant's store."""
+    from repro.configs.hmatrix_paper import PAPER
+    from repro.core import build_hmatrix, halton, make_apply, recompress_store
+
+    pts = halton(n, PAPER.dim)
+    hm = build_hmatrix(pts, PAPER.kernel, k=k, c_leaf=c_leaf, eta=eta,
+                       precompute=True)
+    store = hm.factors
+    flat = dict(store.nbytes())
+
+    rng = np.random.RandomState(0)
+    x = rng.randn(n, 4).astype(np.float32)
+    y_flat = np.asarray(make_apply(hm)(x))
+
+    t0 = time.perf_counter()
+    report = recompress_store(store, tol)
+    recompress_s = time.perf_counter() - t0
+    rc = dict(store.nbytes())
+    y_rc = np.asarray(make_apply(hm)(x))
+    rel_err = float(np.linalg.norm(y_rc - y_flat) / np.linalg.norm(y_flat))
+
+    drop = 1.0 - rc["total"] / flat["total"] if flat["total"] else 0.0
+    return {
+        "n": n, "k": k, "c_leaf": c_leaf, "eta": eta, "tol": tol,
+        "flat": flat, "recompressed": rc,
+        "bytes_per_tenant_flat": flat["total"],
+        "bytes_per_tenant_recompressed": rc["total"],
+        "bytes_drop_frac": drop,
+        "tenants_per_device_flat": HBM_BYTES // max(flat["total"], 1),
+        "tenants_per_device_recompressed": HBM_BYTES // max(rc["total"], 1),
+        "per_level_k": {str(lvl): list(ks)
+                        for lvl, ks in report.per_level_k.items()},
+        "apply_rel_err_vs_flat": rel_err,
+        "recompress_s": recompress_s,
+    }
+
+
+def _build_specs(n, n_tenants, max_batch, k, c_leaf):
+    """Store-backed apply tenants, each its own assembled operator."""
+    from repro.core import build_hmatrix, halton
+    from repro.serve.tenancy import apply_tenant
+
+    specs = []
+    for i in range(n_tenants):
+        pts = halton(n, 2) * (1.0 + 0.25 * i)
+        hm = build_hmatrix(pts, "gaussian", k=k, c_leaf=c_leaf,
+                           precompute=True)
+        specs.append(apply_tenant(hm, max_batch=max_batch))
+    return specs
+
+
+def _serve_skewed(specs, queries, plan, budget):
+    """Serve a fixed 10:1-skew schedule; return (results, global, per-tenant).
+
+    ``plan[j]`` is the tenant index for query ``j`` — the SAME schedule is
+    replayed with and without a budget so the outputs are comparable
+    element for element.
+    """
+    from repro.serve.tenancy import MultiTenantRuntime
+
+    with MultiTenantRuntime(device_bytes_budget=budget) as mtr:
+        handles = [mtr.add_tenant(f"t{i}", spec)
+                   for i, spec in enumerate(specs)]
+        mtr.precompile()
+        futures = [handles[plan[j]].submit(q) for j, q in enumerate(queries)]
+        mtr.flush()
+        results = [np.asarray(f.result()) for f in futures]
+        per = {h.name: {key: h.stats()[key] for key in
+                        ("nbytes", "resident", "spills", "reloads",
+                         "reload_s")}
+               for h in handles}
+        glob = mtr.stats()
+    return results, glob, per
+
+
+def _eviction_bit_identity(n, n_tenants, max_batch, k, c_leaf,
+                           n_requests) -> dict:
+    """10:1 skew under a forcing budget vs the same traffic unevicted."""
+    specs = _build_specs(n, n_tenants, max_batch, k, c_leaf)
+    per_tenant = int(specs[0].store.nbytes()["total"])
+    # room for all but half a tenant: the last add_tenant and every reload
+    # of a spilled store must evict someone
+    budget = per_tenant * n_tenants - per_tenant // 2
+
+    rng = np.random.RandomState(2)
+    queries = [rng.randn(n).astype(np.float32) for _ in range(n_requests)]
+    # 10:1 skew: tenant 0 takes 10 of every 11 requests, the rest cycle
+    # round-robin over the cold tenants — the cold ones are the LRU
+    # eviction candidates and the periodic light requests force reloads
+    plan = [0 if j % 11 else 1 + (j // 11) % (n_tenants - 1)
+            for j in range(n_requests)]
+
+    t0 = time.perf_counter()
+    res_b, glob_b, per_b = _serve_skewed(specs, queries, plan, budget)
+    budget_s = time.perf_counter() - t0
+    res_u, glob_u, _ = _serve_skewed(specs, queries, plan, None)
+
+    identical = all(np.array_equal(a, b) for a, b in zip(res_b, res_u))
+    return {
+        "n": n, "n_tenants": n_tenants, "n_requests": n_requests,
+        "bytes_per_tenant": per_tenant, "budget_bytes": budget,
+        "evictions": glob_b["evictions"], "reloads": glob_b["reloads"],
+        "device_store_bytes": glob_b["device_store_bytes"],
+        "unevicted_evictions": glob_u["evictions"],
+        "per_tenant": per_b,
+        "bit_identical_vs_unevicted": identical,
+        "budget_run_s": budget_s,
+    }
+
+
+def run(n: int = 16384, k: int = 16, tol: float = 1e-2,
+        evict_n: int = 1024, n_tenants: int = 3, max_batch: int = 8,
+        n_requests: int = 132, smoke: bool = False) -> dict:
+    import jax
+
+    from repro.configs.hmatrix_paper import PAPER
+
+    c_leaf = PAPER.c_leaf_convergence
+    evict_c_leaf = 128
+    if smoke:
+        n, evict_n, n_requests = 2048, 512, 44
+        c_leaf, evict_c_leaf = 128, 64
+
+    record = {"bench": "memory", "backend": jax.default_backend(),
+              "smoke": smoke, "hbm_bytes": HBM_BYTES}
+
+    fp = _footprint(n, k, c_leaf, PAPER.eta, tol)
+    record["footprint"] = fp
+    emit("memory_recompress", fp["recompress_s"],
+         f"drop={fp['bytes_drop_frac'] * 100:.1f}%;"
+         f"rel_err={fp['apply_rel_err_vs_flat']:.2e}")
+    emit("memory_bytes_per_tenant", 0.0,
+         f"flat={fp['bytes_per_tenant_flat']};"
+         f"recompressed={fp['bytes_per_tenant_recompressed']};"
+         f"tenants/dev={fp['tenants_per_device_flat']}->"
+         f"{fp['tenants_per_device_recompressed']}")
+
+    ev = _eviction_bit_identity(evict_n, n_tenants, max_batch, k,
+                                evict_c_leaf, n_requests)
+    record["eviction"] = ev
+    emit("memory_eviction", ev["budget_run_s"],
+         f"evictions={ev['evictions']};reloads={ev['reloads']};"
+         f"identical={ev['bit_identical_vs_unevicted']}")
+
+    os.makedirs(RESULTS, exist_ok=True)
+    out = os.path.join(RESULTS, "memory_smoke.json" if smoke
+                       else "memory.json")
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI dispatch check)")
+    args = ap.parse_args()
+    rec = run(smoke=args.smoke)
+    fp, ev = rec["footprint"], rec["eviction"]
+    ok = (ev["evictions"] >= 1 and ev["bit_identical_vs_unevicted"]
+          and fp["apply_rel_err_vs_flat"] < 10 * fp["tol"])
+    if not args.smoke:  # acceptance bar only meaningful at full scale
+        ok = ok and fp["bytes_drop_frac"] >= 0.30
+    print(f"# recompress tol={fp['tol']}: bytes/tenant "
+          f"{fp['bytes_per_tenant_flat']} -> "
+          f"{fp['bytes_per_tenant_recompressed']} "
+          f"({fp['bytes_drop_frac'] * 100:.1f}% drop), eviction run "
+          f"evictions={ev['evictions']} "
+          f"identical={ev['bit_identical_vs_unevicted']}")
+    if not ok:
+        raise SystemExit(1)

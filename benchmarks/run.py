@@ -27,8 +27,8 @@ import traceback
 
 from . import (bench_batching, bench_build, bench_chaos, bench_compare,
                bench_complexity, bench_convergence, bench_matmat,
-               bench_roofline, bench_serve, bench_shard, bench_solve,
-               bench_tenancy)
+               bench_memory, bench_roofline, bench_serve, bench_shard,
+               bench_solve, bench_tenancy)
 
 
 def _suites(args) -> list:
@@ -46,6 +46,7 @@ def _suites(args) -> list:
             ("serve", lambda: bench_serve.run(smoke=True)),
             ("tenancy", lambda: bench_tenancy.run(smoke=True)),
             ("chaos", lambda: bench_chaos.run(smoke=True)),
+            ("memory", lambda: bench_memory.run(smoke=True)),
             ("fig16-17", lambda: bench_compare.run(n=1024)),
             ("roofline", lambda: bench_roofline.run()),
         ]
@@ -67,6 +68,8 @@ def _suites(args) -> list:
          else bench_tenancy.run()),
         ("chaos", lambda: bench_chaos.run(smoke=True) if args.quick
          else bench_chaos.run()),
+        ("memory", lambda: bench_memory.run(smoke=True) if args.quick
+         else bench_memory.run()),
         ("fig16-17", lambda: bench_compare.run(n=4096 if args.quick else 8192)),
         ("roofline", lambda: bench_roofline.run()),
     ]
@@ -104,6 +107,31 @@ def _lint_preflight() -> dict:
     return report
 
 
+def _git_commit() -> str | None:
+    """Short hash of HEAD, or None outside a git checkout."""
+    proc = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                          capture_output=True, text=True, cwd=_REPO)
+    return proc.stdout.strip() or None if proc.returncode == 0 else None
+
+
+def _load_trajectory(path: pathlib.Path) -> list:
+    """Read the trajectory history, tolerating the legacy formats.
+
+    Early revisions wrote a single overwritten dict; a corrupt or foreign
+    file starts a fresh history rather than aborting a benchmark run.
+    """
+    try:
+        with open(path) as f:
+            prior = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return []
+    if isinstance(prior, list):
+        return prior
+    if isinstance(prior, dict):
+        return [prior]
+    return []
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller sizes")
@@ -130,9 +158,13 @@ def main() -> None:
                               "seconds": round(time.perf_counter() - t0, 3)}
             traceback.print_exc()
 
-    # perf-trajectory record: one file the CI history can diff run-over-run
-    # (suite pass/fail + how many accepted host-sync sites the tree carries)
-    traj = {
+    # perf-trajectory record: an append-only history the CI can diff
+    # run-over-run (suite pass/fail + seconds, keyed by commit).  Each run
+    # APPENDS a record rather than overwriting the file, so regressions are
+    # visible as a trend across PRs, not just against the last run.
+    record = {
+        "commit": _git_commit(),
+        "utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
         "mode": "smoke" if args.smoke else ("quick" if args.quick else "full"),
         "suites": statuses,
         "hlint": None if lint_report is None else {
@@ -143,9 +175,11 @@ def main() -> None:
     }
     out = _REPO / "results" / "perf_trajectory.json"
     out.parent.mkdir(parents=True, exist_ok=True)
+    history = _load_trajectory(out)
+    history.append(record)
     with open(out, "w") as f:
-        json.dump(traj, f, indent=2)
-    print(f"# wrote {out.relative_to(_REPO)}")
+        json.dump(history, f, indent=2)
+    print(f"# appended record {len(history)} to {out.relative_to(_REPO)}")
 
     if failed:
         print(f"# FAILED suites: {failed}", file=sys.stderr)

@@ -61,13 +61,19 @@ LOCK_REGISTRY = {
                  # _Tenant fields (attr-name match on any receiver)
                  "pending", "submitted", "launched", "flush_goal",
                  "in_launch", "deficit", "last_served", "removing",
-                 "weight", "res"},
+                 "weight", "res",
+                 # eviction-tier state (device-bytes budget accounting):
+                 # residency flags and the byte counter are read by the
+                 # submit thread (add/remove) and the scheduler thread
+                 # (victim selection, reload reservation)
+                 "resident", "_resident_bytes"},
         "subscript": {"stats"},
         "no_rebind": set(),
         "locked_methods": {"drained", "_check_open", "_check_submittable",
                            "_select", "_ready", "_next_wake", "_pick",
                            "_ensure_thread_locked", "_check_admission",
                            "_tenant_event", "_handle_failure",
+                           "_enforce_budget_locked",
                            # LaneResilience + StragglerMonitor methods
                            # (caller-holds-lock contract)
                            "gate", "allow_submit", "on_success",

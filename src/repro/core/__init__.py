@@ -6,6 +6,10 @@ Public API:
     build_cluster_tree                           (CBC clustering, §2.1)
     build_block_tree, HMatrixPlan                (block cluster tree, §2.3/§4.1)
     aca_fixed_rank, batched_aca                  (ACA, §2.4/§5.4.1)
+    FactorStore, recompress_store                (unified factor storage,
+                                                  rank tables, nbytes,
+                                                  spill/reload, batched
+                                                  algebraic recompression)
     build_hmatrix, make_apply, make_matvec,
     HMatrix                                      (assembly + fast batched
                                                   application, §2.5/§5.4)
@@ -18,6 +22,8 @@ from .clustering import ClusterTree, build_cluster_tree, permute_to_tree, permut
 from .admissibility import admissible, diam, dist
 from .block_tree import HMatrixPlan, build_block_tree
 from .aca import aca_fixed_rank, batched_aca, aca_adaptive
+from .factor_store import (FactorStore, RecompressReport, effective_ranks,
+                           pad_adaptive, recompress_store)
 from .hmatrix import (HMatrix, build_hmatrix, make_apply, make_matvec,
                       dense_matvec_oracle, compute_factors, diagonal_blocks,
                       apply_in_tree_order)
@@ -33,6 +39,8 @@ __all__ = [
     "admissible", "diam", "dist",
     "HMatrixPlan", "build_block_tree",
     "aca_fixed_rank", "batched_aca", "aca_adaptive",
+    "FactorStore", "RecompressReport", "effective_ranks", "pad_adaptive",
+    "recompress_store",
     "HMatrix", "build_hmatrix", "make_apply", "make_matvec",
     "dense_matvec_oracle", "compute_factors", "diagonal_blocks",
     "apply_in_tree_order",

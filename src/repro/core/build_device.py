@@ -57,6 +57,7 @@ from .aca import batched_aca
 from .admissibility import admissible
 from .block_tree import HMatrixPlan
 from .clustering import ClusterTree, next_pow2
+from .factor_store import FactorStore, recompress_store
 from .geometry import get_kernel, KERNELS
 from .hmatrix import HMatrix
 from .morton import morton_encode
@@ -349,6 +350,7 @@ class BuildReport:
     retries: int = 0
     fallback_launches: int = 0
     faults_injected: dict = field(default_factory=dict)
+    recompress_s: float = 0.0       # build-time recompression pass
 
 
 def _fresh_counters() -> dict:
@@ -367,7 +369,7 @@ def _resolve_containment(chaos):
 def build_hmatrix_device(coords, kernel: str | Callable = "gaussian",
                          k: int = 16, c_leaf: int = 256, eta: float = 1.5,
                          precompute: bool = False, use_pallas: bool = False,
-                         chaos=None) -> HMatrix:
+                         chaos=None, recompress_tol: float | None = None) -> HMatrix:
     """Device-side H-matrix construction (drop-in for ``build_hmatrix``).
 
     Same signature and result layout as the host oracle, plus ``chaos=``
@@ -377,18 +379,23 @@ def build_hmatrix_device(coords, kernel: str | Callable = "gaussian",
     """
     hm, _ = build_hmatrix_device_report(
         coords, kernel=kernel, k=k, c_leaf=c_leaf, eta=eta,
-        precompute=precompute, use_pallas=use_pallas, chaos=chaos)
+        precompute=precompute, use_pallas=use_pallas, chaos=chaos,
+        recompress_tol=recompress_tol)
     return hm
 
 
 def build_hmatrix_device_report(
         coords, kernel: str | Callable = "gaussian", k: int = 16,
         c_leaf: int = 256, eta: float = 1.5, precompute: bool = False,
-        use_pallas: bool = False, chaos=None) -> tuple[HMatrix, BuildReport]:
+        use_pallas: bool = False, chaos=None,
+        recompress_tol: float | None = None) -> tuple[HMatrix, BuildReport]:
     """Build on device and return ``(hmatrix, report)``.
 
     The report carries per-stage wall times (what ``bench_build`` and
     tenant onboarding record) and the chaos-containment counters.
+    ``recompress_tol`` runs the batched algebraic recompression pass
+    (``kernels/batched_recompress``) on the freshly built store before
+    it is handed out; its wall time lands in ``report.recompress_s``.
     """
     kernel_name = (kernel if isinstance(kernel, str)
                    else getattr(kernel, "__name__", "custom"))
@@ -418,21 +425,30 @@ def build_hmatrix_device_report(
 
     factors = None
     if precompute:
-        factors = compute_factors_device(tree, plan, kernel, k,
-                                         use_pallas=use_pallas,
-                                         chaos=chaos, _counters=counters)
-        jax.block_until_ready(factors)
+        raw = compute_factors_device(tree, plan, kernel, k,
+                                     use_pallas=use_pallas,
+                                     chaos=chaos, _counters=counters)
+        jax.block_until_ready(raw)
+        factors = FactorStore.from_factors(raw, plan=plan)
     t2 = time.perf_counter()
+
+    recompress_s = 0.0
+    if factors is not None and recompress_tol is not None:
+        recompress_store(factors, recompress_tol, use_pallas=use_pallas)
+        jax.block_until_ready(jax.tree_util.tree_leaves(factors))
+        recompress_s = time.perf_counter() - t2
 
     hm = HMatrix(tree=tree, plan=plan, kernel=kfn, kernel_name=kernel_name,
                  k=k, factors=factors)
     report = BuildReport(
         n=n, n_pad=n_pad, n_levels=n_levels,
-        plan_s=t1 - t0, factors_s=t2 - t1, total_s=t2 - t0,
+        plan_s=t1 - t0, factors_s=t2 - t1,
+        total_s=(t2 - t0) + recompress_s,
         launches=1 + (len(plan.aca_levels) if precompute else 0),
         num_aca_blocks=plan.num_aca_blocks,
         num_dense_blocks=plan.num_dense_blocks,
         retries=counters["retries"],
         fallback_launches=counters["fallback_launches"],
-        faults_injected=counters["faults_injected"])
+        faults_injected=counters["faults_injected"],
+        recompress_s=recompress_s)
     return hm, report

@@ -1,0 +1,316 @@
+"""FactorStore: unified ownership of H-matrix factor storage.
+
+Every layer of the stack (host builder, device builder, tree-ordered
+apply, fused PCG, sharded paths, serving lanes) used to reach directly
+into ad-hoc per-level ``{level: (U, V)}`` dicts, so there was no single
+place to measure bytes, truncate ranks, or spill a cold tenant to host.
+``FactorStore`` is that place: level-grouped low-rank factors and
+(optionally) pre-evaluated dense leaves as packed device arrays with
+explicit dtype/layout metadata, per-level rank tables, and exact
+``nbytes()`` accounting.
+
+Layout
+------
+Level group ``level`` holds ``U: (B, m, k_level)`` and ``V: (B, n,
+k_level)`` where ``B = plan.aca_levels[level].shape[0]`` and ``m = n =
+n_pad >> level`` — the same packed batch layout the kernels consume, so
+wrapping factors in a store changes no math and no compiled programs.
+``ranks[level]`` is a ``(B,)`` int32 table of per-block *effective*
+ranks: block ``b`` promises that columns ``>= ranks[level][b]`` of both
+``U[b]`` and ``V[b]`` are exactly zero.  ``k_level`` may differ per
+level after recompression.
+
+The store is a registered JAX pytree, so it flows through ``jit``
+arguments and ``shard_map`` in_specs exactly like the raw dict did —
+``jax.tree.map``/``tree.leaves`` see the same leaves in the same order,
+which is what keeps the store==legacy bit-identity guarantees free.
+
+Memory tier
+-----------
+``spill()`` moves every array to a host copy with an *explicit*
+``jax.device_get`` (the transfer path ``REPRO_STRICT_TRANSFERS=1``
+allows; the strict guard only wraps the launch call itself, see
+``serve/runtime.py``), and ``reload()`` moves them back with an
+explicit ``jax.device_put``.  A spilled store refuses to flatten:
+launching a panel against it raises instead of silently re-uploading
+inside a traced program, which is the safety invariant the tenancy
+eviction tier relies on (``serve/tenancy.py`` reloads before launch,
+on the scheduler thread only).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LAYOUT = "level-packed[B,m,k]"
+
+
+def effective_ranks(u, v):
+    """Per-block effective rank: index of the last nonzero column + 1.
+
+    A column counts as used if it is nonzero in *either* factor (a zero
+    column in both is reconstruction-inert and therefore padding).
+    """
+    nz = jnp.any(u != 0, axis=1) | jnp.any(v != 0, axis=1)  # (B, k)
+    k = u.shape[2]
+    has = jnp.any(nz, axis=1)
+    last = k - jnp.argmax(nz[:, ::-1], axis=1)  # k - (#trailing zero cols)
+    return jnp.where(has, last, 0).astype(jnp.int32)
+
+
+def pad_adaptive(u, v, rank, k_pad):
+    """Zero-pad one adaptive-rank block ``(m, r), (n, r)`` to pad width.
+
+    ``aca_adaptive`` clamps the rank it returns; the batched fixed-rank
+    path pads every block to ``k_pad``.  This is the one sanctioned
+    bridge between the two: the padded columns are exactly zero, so the
+    store's rank table (``effective_ranks``) lands back on the clamped
+    ``rank`` and both producers agree at the store boundary.
+    """
+    u = np.asarray(u)[:, :rank]
+    v = np.asarray(v)[:, :rank]
+    if rank > k_pad:
+        raise ValueError(f"adaptive rank {rank} exceeds pad width {k_pad}")
+    pu = np.zeros((u.shape[0], k_pad), dtype=u.dtype)
+    pv = np.zeros((v.shape[0], k_pad), dtype=v.dtype)
+    pu[:, :rank] = u
+    pv[:, :rank] = v
+    return pu, pv
+
+
+@jax.tree_util.register_pytree_node_class
+class FactorStore:
+    """Packed, level-grouped factor storage with rank tables and byte
+    accounting.  Mapping-compatible with the legacy ``{level: (U, V)}``
+    dict so every consumer keeps its access pattern."""
+
+    __slots__ = ("levels", "rank_tables", "dense", "_spilled")
+
+    def __init__(self, levels, rank_tables, dense=None, _spilled=False):
+        self.levels = dict(levels)
+        self.rank_tables = dict(rank_tables)
+        self.dense = dense
+        self._spilled = bool(_spilled)
+        if set(self.levels) != set(self.rank_tables):
+            raise ValueError(
+                f"rank table levels {sorted(self.rank_tables)} != factor "
+                f"levels {sorted(self.levels)}")
+
+    # -- construction -------------------------------------------------
+
+    @classmethod
+    def from_factors(cls, factors, plan=None, dense=None, ranks=None,
+                     validate=True):
+        """Wrap a ``{level: (U, V)}`` dict produced by either builder.
+
+        When ``ranks`` is given (adaptive/recompressed producers) the
+        claimed table is *verified* against the arrays: columns at or
+        beyond each block's claimed rank must be exactly zero, and no
+        claim may exceed the pad width.  When omitted, the table is
+        measured from the arrays (``effective_ranks``).  This is the
+        store-boundary assertion that keeps ``aca_adaptive``'s clamped
+        ranks and ``batched_aca_level``'s padded ranks in agreement.
+        """
+        levels = {int(lv): (u, v) for lv, (u, v) in factors.items()}
+        tables = {}
+        for lv, (u, v) in levels.items():
+            if u.ndim != 3 or v.ndim != 3:
+                raise ValueError(f"level {lv}: factors must be (B, m, k); "
+                                 f"got {u.shape} / {v.shape}")
+            if u.shape[0] != v.shape[0] or u.shape[2] != v.shape[2]:
+                raise ValueError(f"level {lv}: U {u.shape} and V {v.shape} "
+                                 "disagree on batch or rank")
+            if plan is not None:
+                b_plan = int(plan.aca_levels[lv].shape[0])
+                if u.shape[0] != b_plan:
+                    raise ValueError(
+                        f"level {lv}: {u.shape[0]} factor blocks but plan "
+                        f"lists {b_plan} admissible blocks")
+            k = int(u.shape[2])
+            if ranks is not None:
+                table = jnp.asarray(ranks[lv], dtype=jnp.int32)
+                if table.shape != (u.shape[0],):
+                    raise ValueError(
+                        f"level {lv}: rank table shape {table.shape} != "
+                        f"({u.shape[0]},)")
+                if validate:
+                    tab = np.asarray(table)
+                    if tab.min() < 0 or tab.max() > k:
+                        raise ValueError(
+                            f"level {lv}: claimed ranks [{tab.min()}, "
+                            f"{tab.max()}] outside [0, {k}] for pad width "
+                            f"{k}")
+                    measured = np.asarray(effective_ranks(u, v))
+                    if (measured > tab).any():
+                        bad = int(np.argmax(measured > tab))
+                        raise ValueError(
+                            f"level {lv} block {bad}: claimed rank "
+                            f"{int(tab[bad])} but column "
+                            f"{int(measured[bad]) - 1} is nonzero — "
+                            "clamped and padded producers disagree at the "
+                            "store boundary")
+            else:
+                table = effective_ranks(u, v)
+            tables[lv] = table
+        return cls(levels, tables, dense=dense)
+
+    # -- pytree protocol ---------------------------------------------
+
+    def tree_flatten(self):
+        if self._spilled:
+            raise RuntimeError(
+                "FactorStore is spilled to host; reload() before using it "
+                "in a device computation (the tenancy scheduler does this "
+                "before launching)")
+        return (self.levels, self.rank_tables, self.dense), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        obj = object.__new__(cls)
+        obj.levels, obj.rank_tables, obj.dense = children
+        obj._spilled = False
+        return obj
+
+    # -- legacy-dict compatibility ------------------------------------
+
+    def __getitem__(self, level):
+        return self.levels[level]
+
+    def __contains__(self, level):
+        return level in self.levels
+
+    def __iter__(self):
+        return iter(self.levels)
+
+    def __len__(self):
+        return len(self.levels)
+
+    def __bool__(self):
+        return bool(self.levels) or self.dense is not None
+
+    def keys(self):
+        return self.levels.keys()
+
+    def values(self):
+        return self.levels.values()
+
+    def items(self):
+        return self.levels.items()
+
+    # -- metadata ------------------------------------------------------
+
+    @property
+    def layout(self):
+        return LAYOUT
+
+    @property
+    def dtype(self):
+        for u, _ in self.levels.values():
+            return u.dtype
+        return self.dense.dtype if self.dense is not None else None
+
+    @property
+    def is_spilled(self):
+        return self._spilled
+
+    def rank_table(self, level):
+        return self.rank_tables[level]
+
+    def nbytes(self):
+        """Exact byte accounting from array metadata (never syncs)."""
+        per_level = {lv: int(u.nbytes) + int(v.nbytes)
+                     for lv, (u, v) in self.levels.items()}
+        rank_b = sum(int(t.nbytes) for t in self.rank_tables.values())
+        dense_b = int(self.dense.nbytes) if self.dense is not None else 0
+        low = sum(per_level.values())
+        return {"low_rank": low, "ranks": rank_b, "dense": dense_b,
+                "per_level": per_level, "total": low + rank_b + dense_b}
+
+    # -- memory tier ---------------------------------------------------
+
+    def spill(self):
+        """Copy every array to host (explicit d->h) and drop the device
+        references.  Returns the device bytes released.  Safe while a
+        launch that captured the old arrays is still in flight: XLA
+        holds its own references to launch inputs."""
+        if self._spilled:
+            return 0
+        freed = self.nbytes()["total"]
+        self.levels = {lv: (jax.device_get(u), jax.device_get(v))
+                       for lv, (u, v) in self.levels.items()}
+        self.rank_tables = {lv: jax.device_get(t)
+                            for lv, t in self.rank_tables.items()}
+        if self.dense is not None:
+            self.dense = jax.device_get(self.dense)
+        self._spilled = True
+        return freed
+
+    def reload(self):
+        """Move the host copies back to device (explicit h->d).  Built
+        all-or-nothing: a failed transfer leaves the store spilled with
+        its host copies intact, so the caller's retry envelope can try
+        again.  Returns the device bytes restored."""
+        if not self._spilled:
+            return 0
+        levels = {lv: (jax.device_put(u), jax.device_put(v))
+                  for lv, (u, v) in self.levels.items()}
+        tables = {lv: jax.device_put(t)
+                  for lv, t in self.rank_tables.items()}
+        dense = jax.device_put(self.dense) if self.dense is not None else None
+        self.levels, self.rank_tables, self.dense = levels, tables, dense
+        self._spilled = False
+        return self.nbytes()["total"]
+
+
+@dataclass(frozen=True)
+class RecompressReport:
+    """What one recompression pass did to a store."""
+
+    tol: float
+    bytes_before: int
+    bytes_after: int
+    per_level_k: dict  # level -> (k_before, k_after)
+
+    @property
+    def ratio(self):
+        return self.bytes_after / max(self.bytes_before, 1)
+
+
+def recompress_store(store, tol, use_pallas=False):
+    """SVD-truncate every level group of ``store`` in place.
+
+    Tolerance semantics are *relative and per block*: block ``b`` keeps
+    singular values ``sigma_i > tol * sigma_0(b)``, so its spectral
+    reconstruction error is at most ``tol * sigma_0(b)`` — the same
+    contract ACA itself targets.  After truncation each level is
+    re-packed to its max surviving rank (``k_level`` shrinks), the rank
+    table is refreshed, and a :class:`RecompressReport` records the
+    byte movement.  Callable at build time (``recompress_tol=`` on both
+    builders) and on demand on a live store.
+    """
+    if store.is_spilled:
+        raise RuntimeError("cannot recompress a spilled store; reload() first")
+    from repro.kernels.batched_recompress.ops import batched_recompress
+    from repro.kernels.batched_recompress.ref import batched_recompress_ref
+
+    before = store.nbytes()["total"]
+    per_level = {}
+    for level in sorted(store.keys()):
+        u, v = store[level]
+        k_old = int(u.shape[2])
+        fn = batched_recompress if use_pallas else batched_recompress_ref
+        u2, v2, ranks = fn(u, v, tol)
+        ranks = jnp.asarray(ranks, dtype=jnp.int32)
+        k_new = max(int(np.asarray(jnp.max(ranks))), 1) if ranks.size else 1
+        k_new = min(k_new, k_old)
+        store.levels[level] = (u2[:, :, :k_new], v2[:, :, :k_new])
+        store.rank_tables[level] = ranks
+        per_level[level] = (k_old, k_new)
+    return RecompressReport(tol=float(tol), bytes_before=before,
+                            bytes_after=store.nbytes()["total"],
+                            per_level_k=per_level)

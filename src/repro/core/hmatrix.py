@@ -32,6 +32,7 @@ import numpy as np
 from .aca import batched_aca
 from .block_tree import HMatrixPlan, build_block_tree
 from .clustering import ClusterTree, build_cluster_tree, permute_from_tree, permute_to_tree
+from .factor_store import FactorStore, recompress_store
 from .geometry import get_kernel
 
 
@@ -42,7 +43,9 @@ class HMatrix:
     kernel: Callable
     kernel_name: str
     k: int
-    factors: dict | None  # level -> (U, V) if precomputed (paper's P mode)
+    # FactorStore if precomputed (paper's P mode); legacy {level: (U, V)}
+    # dicts are still accepted everywhere the factors flow
+    factors: FactorStore | dict | None
 
     @property
     def shape(self):
@@ -50,10 +53,13 @@ class HMatrix:
 
     def memory_report(self) -> dict:
         """Bytes held by the representation (metadata vs factors)."""
-        factor_bytes = 0
-        if self.factors is not None:
-            for U, V in self.factors.values():
-                factor_bytes += U.size * U.dtype.itemsize + V.size * V.dtype.itemsize
+        if isinstance(self.factors, FactorStore):
+            factor_bytes = self.factors.nbytes()["total"]
+        else:
+            factor_bytes = 0
+            if self.factors is not None:
+                for U, V in self.factors.values():
+                    factor_bytes += U.size * U.dtype.itemsize + V.size * V.dtype.itemsize
         meta = sum(v.nbytes for v in self.plan.aca_levels.values())
         meta += self.plan.dense_blocks.nbytes
         dense_equiv = self.tree.n * self.tree.n * 4
@@ -79,13 +85,26 @@ def compute_factors(tree: ClusterTree, plan: HMatrixPlan, kernel: Callable, k: i
 
 def build_hmatrix(coords: jnp.ndarray, kernel: str | Callable = "gaussian",
                   k: int = 16, c_leaf: int = 256, eta: float = 1.5,
-                  precompute: bool = False) -> HMatrix:
-    """Full H-matrix construction (paper's "setup phase")."""
+                  precompute: bool = False,
+                  recompress_tol: float | None = None) -> HMatrix:
+    """Full H-matrix construction (paper's "setup phase").
+
+    With ``precompute`` the factors are returned as a
+    :class:`repro.core.factor_store.FactorStore` (level-grouped packed
+    arrays + per-level rank tables + exact byte accounting); passing
+    ``recompress_tol`` additionally SVD-truncates every level group to
+    that relative tolerance at build time (see ``recompress_store``).
+    """
     kernel_name = kernel if isinstance(kernel, str) else getattr(kernel, "__name__", "custom")
     kfn = get_kernel(kernel) if isinstance(kernel, str) else kernel
     tree = build_cluster_tree(coords, c_leaf=c_leaf)
     plan = build_block_tree(tree, eta=eta)
-    factors = compute_factors(tree, plan, kfn, k) if precompute else None
+    factors = None
+    if precompute:
+        factors = FactorStore.from_factors(compute_factors(tree, plan, kfn, k),
+                                           plan=plan)
+        if recompress_tol is not None:
+            recompress_store(factors, recompress_tol)
     return HMatrix(tree=tree, plan=plan, kernel=kfn, kernel_name=kernel_name,
                    k=k, factors=factors)
 
@@ -132,7 +151,8 @@ def _aca_level_apply(tree, level, blocks, U, V, x_pad, z_pad, use_pallas):
     return z_pad + zl.reshape(-1, r)
 
 
-def _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas):
+def _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas,
+                        dense=None):
     blocks = plan.dense_blocks
     if blocks.shape[0] == 0:
         return z_pad
@@ -142,7 +162,11 @@ def _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas):
     rows, cols = jnp.asarray(blocks[:, 0]), jnp.asarray(blocks[:, 1])
     pts = points.reshape(n_leaf, c, -1)
     x_blk = x_pad.reshape(n_leaf, c, r)[cols]                  # (B, c, R)
-    if use_pallas:
+    if dense is not None:
+        # stored dense leaves (FactorStore.dense): a straight batched MXU
+        # contraction — no kernel regeneration, so no Pallas branch needed
+        y = jnp.einsum("bij,bjr->bir", dense, x_blk)
+    elif use_pallas:
         from repro.kernels.batched_dense_matvec.ops import batched_kernel_matmat
         y = batched_kernel_matmat(pts[rows], pts[cols], x_blk,
                                   tree_kernel_name(kernel))
@@ -179,9 +203,13 @@ def apply_in_tree_order(tree: ClusterTree, plan: HMatrixPlan, kernel: Callable,
     points : jnp.ndarray, shape (n_pad, d)
         Tree-ordered coordinates as a runtime argument (see
         :func:`make_apply` on why this must not be a traced constant).
-    factors : dict | None
-        ``level -> (U (B, m, k), V (B, m, k))`` stored ACA factors (P mode)
-        or None (NP mode: regenerate per product).
+    factors : FactorStore | dict | None
+        Stored ACA factors (P mode) — a
+        :class:`repro.core.factor_store.FactorStore` or a legacy
+        ``level -> (U (B, m, k), V (B, m, k))`` dict — or None (NP mode:
+        regenerate per product).  A store with pre-evaluated dense
+        leaves (``store.dense``) also short-circuits the on-the-fly
+        dense-leaf kernel regeneration.
     x_pad : jnp.ndarray, shape (n_pad, R)
         Tree-ordered operand panel (padded tail rows zero).
 
@@ -205,7 +233,8 @@ def apply_in_tree_order(tree: ClusterTree, plan: HMatrixPlan, kernel: Callable,
                 U, V = batched_aca(rp, cp, kernel, k)
         z_pad = _aca_level_apply(tree, level, blocks, U, V, x_pad, z_pad,
                                  use_pallas)
-    return _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas)
+    return _dense_apply_points(points, plan, kernel, x_pad, z_pad, use_pallas,
+                               dense=getattr(factors, "dense", None))
 
 
 def make_apply(hm: HMatrix, use_pallas: bool = False, mesh=None,

@@ -1,0 +1,188 @@
+"""Pallas TPU kernel: batched algebraic recompression of ACA factors.
+
+One program per admissible block of a level group, entirely in VMEM
+(the factors are (m, k)/(n, k) panels with k ~ 16, so the working set
+is dominated by the two panels plus a handful of (k, k) cores):
+
+    Gu = U^T U + eps I = Lu Lu^T        Gram + Cholesky (``fori_loop``
+    Gv = V^T V + eps I = Lv Lv^T         rank-1 updates, same idiom as
+                                         ``batched_block_solve``)
+    Ru = Lu^T, Rv = Lv^T                 so U = Qu Ru with Qu = U Ru^-1
+    M  = Ru Rv^T                         (k, k) core
+    M  = W S Z^T                         one-sided Jacobi SVD: a fixed
+                                         number of right-rotation sweeps
+                                         orthogonalises M's columns and
+                                         accumulates Z; S = column norms
+    U' = U (Ru^-1 (M  . keep))           = Qu W S_t   (W S_t = M . keep)
+    V' = V (Rv^-1 (Z  . keep))           = Qv Z_t
+
+``keep`` drops singular values ``sigma_i <= tol * max(sigma)`` per
+block.  Triangular inverses are k-step back-substitutions on a (k, k)
+identity panel (the ``bwd`` sweep of the Cholesky-solve kernel).  The
+kernel emits columns unsorted; ``ops.py`` reorders by descending sigma
+so the packed store can slice to the level's max surviving rank.
+
+Accuracy: forming Gram matrices squares the condition number, so in
+f32 this path resolves relative singular values down to ~sqrt(eps_f32)
+~ 3e-4; ``ops.py`` uses the QR-based jnp oracle below that regime.
+
+VMEM working set per program (f32):
+    U, U' + V, V' panels   2 * (m + n) * k * 4 B
+    cores (Gu/Lu/Ru^-1, Gv/Lv/Rv^-1, M, Z, masks)  ~8 * k * k * 4 B
+  m = n = 4096, k = 16: ~1.05 MB << 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .. import default_interpret
+
+_TINY = 1e-30   # pivot/diagonal clamp (zero blocks stay finite -> rank 0)
+_JITTER = 1e-7  # relative Gram jitter: keeps Cholesky of rank-deficient
+                # Grams positive definite; the noise floor it adds sits
+                # below the f32 Gram accuracy floor anyway
+_SWEEPS = 8     # Jacobi sweeps; k <= 32 converges well before this
+
+
+def _chol(a, k, dtype, idx_col, idx_row):
+    """Right-looking Cholesky of a (k, k) SPD value, rank-1 updates."""
+    def body(j, carry):
+        l_mat, a_r = carry
+        d2 = lax.dynamic_slice(a_r, (j, j), (1, 1))
+        dinv = lax.rsqrt(jnp.maximum(d2, jnp.asarray(_TINY, dtype)))
+        col = lax.dynamic_slice(a_r, (0, j), (k, 1))
+        row = lax.dynamic_slice(a_r, (j, 0), (1, k))
+        l_col = jnp.where(idx_col >= j, col * dinv, 0.0)
+        l_row = jnp.where(idx_row >= j, row * dinv, 0.0)
+        l_mat = l_mat + l_col * (idx_row == j).astype(dtype)
+        a_r = a_r - l_col * l_row
+        return l_mat, a_r
+
+    l_mat, _ = lax.fori_loop(0, k, body, (jnp.zeros_like(a), a))
+    return l_mat
+
+
+def _inv_upper(r_mat, k, dtype, idx_col):
+    """X with R X = I for upper-triangular R: k back-substitution steps
+    on a (k, k) identity panel."""
+    eye = (lax.broadcasted_iota(jnp.int32, (k, k), 0)
+           == lax.broadcasted_iota(jnp.int32, (k, k), 1)).astype(dtype)
+
+    def bwd(t, carry):
+        x, yr = carry
+        i = k - 1 - t
+        r_col = lax.dynamic_slice(r_mat, (0, i), (k, 1))    # zeros below i
+        d = lax.dynamic_slice(r_mat, (i, i), (1, 1))
+        d = jnp.where(jnp.abs(d) > _TINY, d, jnp.asarray(_TINY, dtype))
+        xi = lax.dynamic_slice(yr, (i, 0), (1, k)) / d
+        x = x + (idx_col == i).astype(dtype) * xi
+        yr = yr - r_col * xi
+        return x, yr
+
+    x, _ = lax.fori_loop(0, k, bwd, (jnp.zeros_like(r_mat), eye))
+    return x
+
+
+def _jacobi(core, k, dtype):
+    """One-sided Jacobi: returns (M_final, Z) with core = M_final Z^T,
+    M_final's columns orthogonal.  The pair loop is static (k(k-1)/2
+    rotations traced once); ``fori_loop`` repeats it for the sweeps."""
+    eye = (lax.broadcasted_iota(jnp.int32, (k, k), 0)
+           == lax.broadcasted_iota(jnp.int32, (k, k), 1)).astype(dtype)
+
+    def sweep(_, carry):
+        m_mat, z = carry
+        for p in range(k - 1):
+            for q in range(p + 1, k):
+                mp, mq = m_mat[:, p], m_mat[:, q]
+                app = jnp.sum(mp * mp)
+                aqq = jnp.sum(mq * mq)
+                apq = jnp.sum(mp * mq)
+                # rotate only when the pair is meaningfully coupled
+                rot = jnp.abs(apq) > jnp.asarray(_TINY, dtype)
+                apq_safe = jnp.where(rot, apq, 1.0)
+                tau = (aqq - app) / (2.0 * apq_safe)
+                t = jnp.sign(tau) / (jnp.abs(tau) + jnp.sqrt(1.0 + tau * tau))
+                c = lax.rsqrt(1.0 + t * t)
+                s = c * t
+                c = jnp.where(rot, c, 1.0)
+                s = jnp.where(rot, s, 0.0)
+                m_mat = (m_mat.at[:, p].set(c * mp - s * mq)
+                              .at[:, q].set(s * mp + c * mq))
+                zp, zq = z[:, p], z[:, q]
+                z = (z.at[:, p].set(c * zp - s * zq)
+                      .at[:, q].set(s * zp + c * zq))
+        return m_mat, z
+
+    return lax.fori_loop(0, _SWEEPS, sweep, (core, eye))
+
+
+def _recompress_kernel(u_ref, v_ref, u2_ref, v2_ref, s_ref, *, tol):
+    u = u_ref[0]                                   # (m, k)
+    v = v_ref[0]                                   # (n, k)
+    k = u.shape[1]
+    dtype = u.dtype
+    idx_col = lax.broadcasted_iota(jnp.int32, (k, 1), 0)
+    idx_row = lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+    gu = jnp.dot(u.T, u, preferred_element_type=dtype)
+    gv = jnp.dot(v.T, v, preferred_element_type=dtype)
+    eye_mask = (idx_col == idx_row).astype(dtype)
+    gu = gu + (_JITTER / k) * jnp.trace(gu) * eye_mask
+    gv = gv + (_JITTER / k) * jnp.trace(gv) * eye_mask
+
+    ru = jnp.swapaxes(_chol(gu, k, dtype, idx_col, idx_row), 0, 1)
+    rv = jnp.swapaxes(_chol(gv, k, dtype, idx_col, idx_row), 0, 1)
+    iru = _inv_upper(ru, k, dtype, idx_col)
+    irv = _inv_upper(rv, k, dtype, idx_col)
+
+    core = jnp.dot(ru, rv.T, preferred_element_type=dtype)
+    m_fin, z = _jacobi(core, k, dtype)
+
+    s = jnp.sqrt(jnp.sum(m_fin * m_fin, axis=0))   # (k,) column norms
+    keep = (s > tol * jnp.max(s)).astype(dtype)    # relative truncation
+    # W S_t = M_final . keep (kept columns already carry their sigma)
+    u2_ref[0] = jnp.dot(u, jnp.dot(iru, m_fin * keep[None, :]),
+                        preferred_element_type=dtype)
+    v2_ref[0] = jnp.dot(v, jnp.dot(irv, z * keep[None, :]),
+                        preferred_element_type=dtype)
+    s_ref[0] = (s * keep)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("tol", "interpret"))
+def batched_recompress_t(u: jnp.ndarray, v: jnp.ndarray, tol: float,
+                         interpret: bool | None = None):
+    """Per-block SVD truncation of one level group.
+
+    u: (B, m, k), v: (B, n, k) -> (u2, v2, s_t) with ``s_t`` (B, k) the
+    truncated singular values (zero = dropped column).  Columns are NOT
+    sorted; ``ops.batched_recompress`` reorders by descending sigma.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, m, k = u.shape
+    n = v.shape[1]
+    return pl.pallas_call(
+        functools.partial(_recompress_kernel, tol=tol),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, k), lambda i: (i, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, 1, k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, m, k), u.dtype),
+            jax.ShapeDtypeStruct((b, n, k), v.dtype),
+            jax.ShapeDtypeStruct((b, 1, k), u.dtype),
+        ],
+        interpret=interpret,
+    )(u, v)

@@ -1,0 +1,67 @@
+"""jit'd public wrapper for the batched recompression Pallas kernel.
+
+Dispatch mirrors the repo's kernel convention: blocks whose VMEM
+working set would overflow the budget fall back to the jnp oracle
+(``batched_recompress_ref``), as do tolerances below the f32
+Gram-Cholesky accuracy floor (~sqrt(eps_f32)) where the QR-based
+oracle is the numerically honest path.  The Pallas path emits columns
+unsorted, so this wrapper reorders every block by descending singular
+value — both paths return the same packed, descending, trailing-zero
+layout the :class:`repro.core.factor_store.FactorStore` rank tables
+expect.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import force_ref
+
+from .kernel import batched_recompress_t
+from .ref import batched_recompress_ref
+
+# Conservative VMEM budget for one program's working set (bytes).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+# Below this relative tolerance the Gram formation's squared condition
+# number (f32) cannot resolve the truncation threshold; use the oracle.
+GRAM_TOL_FLOOR = 3e-4
+
+
+def _vmem_bytes(m: int, n: int, k: int, itemsize: int = 4) -> int:
+    return itemsize * (2 * (m + n) * k + 8 * k * k)
+
+
+def batched_recompress(u: jnp.ndarray, v: jnp.ndarray, tol: float):
+    """SVD-truncate one level group of ACA factors to tolerance.
+
+    Parameters
+    ----------
+    u : jnp.ndarray, shape (B, m, k)
+    v : jnp.ndarray, shape (B, n, k)
+        Packed low-rank factors of one admissible level group.
+    tol : float
+        Relative per-block truncation threshold: block ``b`` keeps
+        singular values ``sigma_i > tol * sigma_0(b)``, bounding its
+        spectral reconstruction error by ``tol * sigma_0(b)``.
+
+    Returns
+    -------
+    u2, v2 : jnp.ndarray, same shapes as ``u``/``v``
+        Factors with columns sorted by descending singular value and
+        truncated columns exactly zero (``U2[b] @ V2[b].T`` is the
+        rank-truncated ``U[b] @ V[b].T``).
+    ranks : jnp.ndarray, shape (B,), int32
+        Surviving rank per block — the store's rank table entry.
+    """
+    b, m, k = u.shape
+    n = v.shape[1]
+    if (force_ref() or tol < GRAM_TOL_FLOOR
+            or _vmem_bytes(m, n, k) > VMEM_BUDGET):
+        return batched_recompress_ref(u, v, tol)
+    u2, v2, s_t = batched_recompress_t(u, v, float(tol))
+    s_t = s_t[:, 0, :]                              # (B, k)
+    order = jnp.argsort(-s_t, axis=1, stable=True)
+    u2 = jnp.take_along_axis(u2, order[:, None, :], axis=2)
+    v2 = jnp.take_along_axis(v2, order[:, None, :], axis=2)
+    ranks = (s_t > 0).sum(axis=1).astype(jnp.int32)
+    return u2, v2, ranks

@@ -1,0 +1,40 @@
+"""jnp reference oracle for batched algebraic recompression.
+
+One QR per factor, one small SVD per block — the textbook low-rank
+truncation (Bebendorf §1.1.4, and the batched-GPU formulation of
+Boukaram/Turkiyyah/Keyes 1902.01829):
+
+    A = U V^T = (Qu Ru)(Qv Rv)^T,   M = Ru Rv^T = W S Z^T  (k x k)
+    A' = (Qu W S_t)(Qv Z_t)^T
+
+with ``S_t`` the singular values truncated at the *relative, per-block*
+threshold ``sigma_i > tol * sigma_0`` (so the spectral error of block
+``b`` is at most ``tol * sigma_0(b)`` — the same contract ACA targets).
+Truncated columns are returned as exact zeros, in descending-sigma
+order, so the store's trailing-zero rank invariant holds and the packed
+width can be sliced to the level's max surviving rank.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def batched_recompress_ref(u: jnp.ndarray, v: jnp.ndarray, tol: float):
+    """Recompress one level group.  u: (B, m, k), v: (B, n, k).
+
+    Returns ``(u2, v2, ranks)``: same shapes with columns ordered by
+    descending singular value of ``U V^T``, columns at or beyond each
+    block's surviving rank exactly zero, and ``ranks`` the (B,) int32
+    table of surviving ranks.
+    """
+    qu, ru = jnp.linalg.qr(u)                       # (B, m, k), (B, k, k)
+    qv, rv = jnp.linalg.qr(v)
+    core = ru @ jnp.swapaxes(rv, -1, -2)            # (B, k, k)
+    w, s, zt = jnp.linalg.svd(core, full_matrices=False)
+    keep = s > tol * s[:, :1]                       # s sorted descending
+    s_t = jnp.where(keep, s, 0.0).astype(u.dtype)
+    kf = keep[:, None, :].astype(u.dtype)
+    u2 = qu @ (w * s_t[:, None, :])                 # Qu W S_t
+    v2 = (qv @ jnp.swapaxes(zt, -1, -2)) * kf       # Qv Z, truncated cols -> 0
+    ranks = keep.sum(axis=1).astype(jnp.int32)
+    return u2, v2, ranks

@@ -145,7 +145,17 @@ def make_sharded_apply(hm: HMatrix, mesh: Mesh, axis=None,
 
 
 def _none_to_empty(factors):
-    """None factors -> {} so the pytree has a stable spec structure."""
+    """None factors -> {} so the pytree has a stable spec structure.
+
+    A :class:`repro.core.factor_store.FactorStore` passes through as-is:
+    it is a registered pytree, so ``_replicated_specs`` and the
+    ``shard_map`` in_specs treat it exactly like the legacy dict (every
+    packed level group replicated).  The sharded executors capture the
+    store ONCE here — recompressing or spilling it after ``make_*`` does
+    not retarget an already-built sharded apply/solve (rebuild instead;
+    ``serve/tenancy.py``'s eviction tier never hands a sharded executor
+    a spilled store for the same reason).
+    """
     return {} if factors is None else factors
 
 

@@ -349,17 +349,26 @@ class PanelLane:
     attaches that guard to every launched panel (costs one host copy of
     the packed panel per launch, so it is opt-in); ``on_fallback`` is the
     owning runtime's locked stats callback.
+
+    ``store`` is the :class:`~repro.core.factor_store.FactorStore` the
+    launch callable reads its factors from, when it has one (P-mode
+    tenants).  The lane itself never touches the arrays — it holds the
+    store so the owning runtime can do byte accounting (``nbytes()``)
+    and drive the memory tier (spill cold tenants, reload before
+    launch; see ``MultiTenantRuntime``).
     """
 
     def __init__(self, n: int, max_batch: int, launch: Callable,
                  n_dev: int = 1, slots: int = 2, injector=None,
                  fallback: Callable | None = None,
                  guard_outputs: bool = False,
-                 on_fallback: Callable | None = None):
+                 on_fallback: Callable | None = None,
+                 store=None):
         self.n = int(n)
         self.max_batch = int(max_batch)
         self.widths = panel_width_buckets(self.max_batch, n_dev)
         self.injector = injector
+        self.store = store
         self._inner = launch            # un-instrumented: warmup/compile path
         self._launch = injector.wrap(launch) if injector is not None else launch
         self._fallback = fallback
@@ -368,6 +377,10 @@ class PanelLane:
         self._staging = [np.zeros((self.n, self.max_batch), np.float32)
                          for _ in range(slots)]
         self._buf = 0
+
+    def nbytes(self) -> int:
+        """Device bytes of this lane's factor store (0 when storeless)."""
+        return int(self.store.nbytes()["total"]) if self.store is not None else 0
 
     def launch_panel(self, chunk, pacer: LaunchPacer, on_retire=None):
         """Pack ``chunk`` into the current staging buffer, pad to its width
@@ -479,6 +492,11 @@ class PanelRuntime:
         Reference launch (``(n, w) -> (n, w)``, e.g. the server's
         ``use_pallas=False`` path) used for the one-shot degraded relaunch
         of a panel whose output failed NaN/Inf validation.
+    store : FactorStore, optional
+        The factor store the launch callable reads (P mode).  Held on the
+        lane for byte accounting (``lane.nbytes()``); the multi-tenant
+        runtime's memory tier spills/reloads through it (see
+        ``docs/MEMORY.md``).
 
     Attributes
     ----------
@@ -503,7 +521,7 @@ class PanelRuntime:
                  max_queue: int | None = None, max_inflight: int = 2,
                  chaos=None, resilience: ResiliencePolicy | None = None,
                  shed_above: int | None = None,
-                 fallback: Callable | None = None):
+                 fallback: Callable | None = None, store=None):
         if max_queue is not None and max_queue < max_batch:
             raise ValueError(f"max_queue ({max_queue}) must be >= "
                              f"max_batch ({max_batch})")
@@ -522,7 +540,7 @@ class PanelRuntime:
         self._lane = PanelLane(n, max_batch, launch, n_dev=n_dev,
                                slots=max_inflight, injector=injector,
                                fallback=fallback, guard_outputs=guard,
-                               on_fallback=self._count_fallback)
+                               on_fallback=self._count_fallback, store=store)
         self.n = self._lane.n
         self.max_batch = self._lane.max_batch
         self.widths = self._lane.widths

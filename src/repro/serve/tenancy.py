@@ -107,6 +107,15 @@ class TenantSpec:
         coordinates (``apply_tenant(coords)`` / ``solve_tenant(coords)``
         record the on-device build here); surfaced as ``onboard_s`` in
         the per-tenant and runtime ``stats()``.
+    store : FactorStore, optional
+        The :class:`~repro.core.factor_store.FactorStore` the launch
+        callable reads its precomputed factors from (``apply_tenant`` /
+        ``solve_tenant`` wire ``hm.factors`` automatically for P-mode
+        tenants).  Enables the memory tier: per-tenant ``nbytes`` in
+        ``stats()``, and LRU spill/reload under the runtime's
+        ``device_bytes_budget`` (see ``docs/MEMORY.md``).  NP-mode
+        tenants (no precomputed factors) have nothing to spill and
+        leave this None.
     """
 
     n: int
@@ -120,6 +129,7 @@ class TenantSpec:
     resilience: ResiliencePolicy | None = None
     shed_above: int | None = None
     build_s: float | None = None
+    store: object | None = None
 
     def __post_init__(self):
         if self.weight <= 0:
@@ -172,10 +182,27 @@ def apply_tenant(hm, max_batch: int = 64, use_pallas: bool = False,
     # closures are cheap — nothing compiles until a degraded panel needs it
     spec_kw.setdefault("fallback",
                        make_apply(hm, use_pallas=False, mesh=mesh))
+    _wire_store(spec_kw, hm, mesh)
     return TenantSpec(n=hm.shape[0],
                       max_batch=pad_panel_width(max_batch, n_dev),
                       launch=make_apply(hm, use_pallas=use_pallas, mesh=mesh),
                       n_dev=n_dev, **spec_kw)
+
+
+def _wire_store(spec_kw: dict, hm, mesh):
+    """Attach ``hm.factors`` as the tenant's FactorStore when eligible.
+
+    Only P-mode single-device tenants participate in the memory tier by
+    default: NP-mode tenants have no factors to spill, and the
+    row-sharded mesh executors snapshot (pad) the factor arrays at make
+    time, so spilling the store would free nothing while still blocking
+    launches.  An explicit ``store=`` in the spec kwargs always wins.
+    """
+    from repro.core.factor_store import FactorStore
+    factors = getattr(hm, "factors", None)
+    if (mesh is None and isinstance(factors, FactorStore)
+            and factors.nbytes()["total"] > 0):
+        spec_kw.setdefault("store", hm.factors)
 
 
 def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
@@ -214,6 +241,7 @@ def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
         return c
 
     spec_kw.setdefault("fallback", fallback)
+    _wire_store(spec_kw, hm, mesh)
     return TenantSpec(n=hm.shape[0],
                       max_batch=pad_panel_width(max_batch, n_dev),
                       launch=launch, n_dev=n_dev, **spec_kw)
@@ -224,7 +252,7 @@ class _Tenant:
 
     __slots__ = ("name", "spec", "lane", "pending", "submitted", "launched",
                  "flush_goal", "in_launch", "weight", "deficit",
-                 "last_served", "removing", "stats", "res")
+                 "last_served", "removing", "resident", "stats", "res")
 
     def __init__(self, name: str, spec: TenantSpec, slots: int, lock,
                  injector=None, resilience=None, on_fallback=None):
@@ -234,7 +262,8 @@ class _Tenant:
         self.lane = PanelLane(spec.n, spec.max_batch, spec.launch,
                               n_dev=spec.n_dev, slots=slots,
                               injector=injector, fallback=spec.fallback,
-                              guard_outputs=guard, on_fallback=on_fallback)
+                              guard_outputs=guard, on_fallback=on_fallback,
+                              store=spec.store)
         self.res = (LaneResilience(resilience, name)
                     if resilience is not None else None)
         self.pending: list = []         # [(np vector, PanelFuture, t_arrival)]
@@ -246,6 +275,9 @@ class _Tenant:
         self.deficit = 0.0              # banked launch-slot credit (DRR)
         self.last_served = 0            # global launch seq, for tie-breaks
         self.removing = False
+        # memory tier: does this tenant's store hold device arrays?
+        self.resident = (spec.store is not None
+                         and not spec.store.is_spilled)
         self.stats = _Stats(lock, {"launched_widths": deque(maxlen=1024),
                                    "panels_launched": 0, "submitted": 0,
                                    "max_queue_depth": 0,
@@ -259,6 +291,10 @@ class _Tenant:
                                                      if self.res is None
                                                      else "closed"),
                                    "onboard_s": spec.build_s,
+                                   "nbytes": self.lane.nbytes(),
+                                   "resident": self.resident,
+                                   "spills": 0, "reloads": 0,
+                                   "reload_s": None,
                                    "events": deque(maxlen=256)})
 
     def drained(self) -> bool:
@@ -352,6 +388,19 @@ class MultiTenantRuntime:
         GLOBAL load-shedding admission budget: ``submit`` on any tenant
         raises ``OverloadedError`` while the TOTAL queued requests across
         tenants reach this budget (per-tenant budgets live on the spec).
+    device_bytes_budget : int, optional
+        Memory-pressure tier: cap on the TOTAL factor-store bytes
+        resident on device across tenants.  When adding or reloading a
+        store would exceed it, the least-recently-served cold tenants'
+        stores are spilled to host copies (explicit ``jax.device_get``)
+        until the budget holds; a spilled tenant's first request
+        transparently reloads its store on the scheduler thread before
+        the launch (explicit ``jax.device_put``; wall time in the
+        tenant's ``reload_s`` stat), under the same chaos/retry envelope
+        as the launch itself.  ``None`` (default) disables the tier.
+        Tenants whose stores exceed the budget single-handedly are
+        served anyway (overcommit beats an outage); the accounting in
+        ``stats()["device_store_bytes"]`` stays exact either way.
 
     Attributes
     ----------
@@ -369,7 +418,8 @@ class MultiTenantRuntime:
 
     def __init__(self, max_inflight: int = 2, chaos=None,
                  resilience: ResiliencePolicy | None = None,
-                 shed_above: int | None = None):
+                 shed_above: int | None = None,
+                 device_bytes_budget: int | None = None):
         chaos_spec = resolve_chaos(chaos)
         if resilience is None and chaos_spec is not None:
             resilience = ResiliencePolicy()
@@ -379,17 +429,24 @@ class MultiTenantRuntime:
         self.chaos_spec = chaos_spec    # frozen (lock-free reads ok)
         self.resilience = resilience    # frozen default policy
         self.shed_above = shed_above
+        # frozen config (lock-free reads ok); the mutable byte counter
+        # _resident_bytes is lock-guarded like the tenant registry
+        self.device_bytes_budget = device_bytes_budget
         self._monitor = StragglerMonitor()
         self._tenants: dict[str, _Tenant] = {}
         self._compiled: set = set()     # warmed (tenant name, width) pairs
         self._launch_seq = 0
+        self._resident_bytes = 0        # device bytes held by tenant stores
         self.stats = _Stats(self._cv,
                             {"panels_launched": 0,
                              "launch_order": deque(maxlen=2048),
                              "tenants_added": 0, "tenants_removed": 0,
                              "retries": 0, "panel_failures": 0,
                              "shed_requests": 0, "straggler_tenants": [],
-                             "onboard_s": {}})
+                             "onboard_s": {},
+                             "evictions": 0, "reloads": 0,
+                             "device_store_bytes": 0,
+                             "budget_bytes": device_bytes_budget})
         self._closing = False
         self._closed = False
         self._thread: threading.Thread | None = None
@@ -430,6 +487,12 @@ class MultiTenantRuntime:
                 # onboarding latency rollup: tenants built from raw
                 # coordinates report their construction wall time
                 self.stats["onboard_s"][name] = float(spec.build_s)
+            if tenant.resident:
+                # memory tier: account the new store, then spill LRU cold
+                # tenants until the device-bytes budget holds again
+                self._resident_bytes += tenant.stats["nbytes"]
+                self.stats["device_store_bytes"] = self._resident_bytes
+                self._enforce_budget_locked(exempt=tenant)
             self._cv.notify_all()
             return TenantHandle(self, tenant)
 
@@ -464,6 +527,12 @@ class MultiTenantRuntime:
             self._compiled = {kw for kw in self._compiled if kw[0] != name}
             self._monitor.forget(name)
             self.stats["tenants_removed"] += 1
+            if tenant.resident:
+                # release the departing store's device-byte accounting
+                tenant.resident = False
+                tenant.stats["resident"] = False
+                self._resident_bytes -= tenant.stats["nbytes"]
+                self.stats["device_store_bytes"] = self._resident_bytes
             self._cv.notify_all()                   # wake backpressured submits
 
     def tenants(self) -> tuple:
@@ -572,9 +641,16 @@ class MultiTenantRuntime:
         Incremental: ``(tenant, width)`` pairs already warmed — by a prior
         ``precompile`` or by real launches — are skipped, so calling this
         after :meth:`add_tenant` compiles only the new tenant's programs.
+        Tenants whose store is spilled under the device-bytes budget are
+        skipped too: their factors cannot flow through a trace while on
+        host, and the compile happens on the first post-reload launch
+        (the jit cache keys on the flattened store's shapes, which a
+        reload preserves, so nothing is compiled twice).
         """
         with self._cv:
             todo = [(t.name, t.lane, w) for t in self._tenants.values()
+                    if not (t.spec.store is not None
+                            and t.spec.store.is_spilled)
                     for w in t.lane.widths
                     if (t.name, w) not in self._compiled]
         for name, lane, w in todo:      # blocking compiles OUTSIDE the lock
@@ -672,6 +748,87 @@ class MultiTenantRuntime:
                 t.deficit += t.weight   # some tenant reaches 1.0 eventually)
         # unreachable
 
+    def _enforce_budget_locked(self, exempt: _Tenant | None = None,
+                               incoming: int = 0):
+        """Spill LRU cold tenants until the device-bytes budget holds.
+
+        Caller holds ``_cv``.  ``incoming`` reserves room for bytes about
+        to land (a store reload); ``exempt`` protects the tenant being
+        served.  Victims must be resident, store-backed, and not
+        ``in_launch`` — the reloading tenant is ``in_launch`` for the
+        whole reload+launch window, so victim selection can never race a
+        reload.  The spill itself is an explicit ``jax.device_get`` of
+        already-materialised arrays (fast, and legal under
+        ``REPRO_STRICT_TRANSFERS=1``, which guards only the launch
+        call).  If every remaining store is pinned or the incoming store
+        alone exceeds the budget, we overcommit and keep serving.
+        """
+        budget = self.device_bytes_budget
+        if budget is None:
+            return
+        while self._resident_bytes + incoming > budget:
+            victims = [t for t in self._tenants.values()
+                       if t.resident and t.spec.store is not None
+                       and not t.in_launch and t is not exempt]
+            if not victims:
+                break                   # overcommit beats an outage
+            victim = min(victims, key=lambda t: t.last_served)  # LRU
+            freed = int(victim.spec.store.spill())
+            victim.resident = False
+            victim.stats["resident"] = False
+            victim.stats["spills"] += 1
+            self._resident_bytes -= freed
+            self.stats["evictions"] += 1
+            self.stats["device_store_bytes"] = self._resident_bytes
+            self._tenant_event(victim, "spill",
+                               f"store spilled to host ({freed} bytes "
+                               f"freed, LRU under {budget}-byte budget)")
+
+    def _reload_store(self, tenant: _Tenant):
+        """Reload ``tenant``'s spilled store before its launch.
+
+        Scheduler thread, OUTSIDE the lock (an h->d transfer can take
+        long enough to stall submits), after the locked pick phase set
+        ``in_launch`` and reserved the bytes.  When the tenant has a
+        chaos injector the reload runs under it, so injected faults hit
+        the reload exactly like a launch attempt and flow into the same
+        ``_handle_failure`` retry/breaker path; every injected raise
+        fires BEFORE the wrapped callable, so a faulted reload leaves
+        the store spilled with its host copies intact for the retry.
+        Returns None on success or the exception on failure (after
+        rolling back the byte reservation).
+        """
+        store = tenant.spec.store
+        t0 = time.monotonic()
+        try:
+            inj = tenant.lane.injector
+            if inj is not None:
+                def _reload(_panel):
+                    store.reload()
+                    # token for the injector's NaN-poison arm; the reload
+                    # itself is an exact transfer, so a poisoned token is
+                    # simply discarded
+                    return np.zeros((1, 1), np.float32)
+                inj.wrap(_reload)(None)
+            else:
+                store.reload()
+        except Exception as exc:
+            with self._cv:
+                if store.is_spilled:    # reload never happened: unreserve
+                    self._resident_bytes -= tenant.stats["nbytes"]
+                    self.stats["device_store_bytes"] = self._resident_bytes
+            return exc
+        reload_s = time.monotonic() - t0
+        with self._cv:
+            tenant.resident = True
+            tenant.stats["resident"] = True
+            tenant.stats["reloads"] += 1
+            tenant.stats["reload_s"] = reload_s
+            self.stats["reloads"] += 1
+            self._tenant_event(tenant, "reload",
+                               f"store reloaded to device in {reload_s:.4f}s")
+        return None
+
     def _scheduler(self):
         while True:
             # global pacing: block on the oldest in-flight panel across ALL
@@ -705,11 +862,25 @@ class MultiTenantRuntime:
                 tenant.in_launch = True
                 self._launch_seq += 1
                 tenant.last_served = self._launch_seq
+                store = tenant.spec.store
+                needs_reload = store is not None and store.is_spilled
+                if needs_reload:
+                    # transparent reload on first request: make room and
+                    # reserve the bytes BEFORE dropping the lock, so a
+                    # concurrent add_tenant sees exact accounting; we are
+                    # in_launch, so we cannot be picked as a spill victim
+                    self._enforce_budget_locked(
+                        exempt=tenant, incoming=tenant.stats["nbytes"])
+                    self._resident_bytes += tenant.stats["nbytes"]
+                    self.stats["device_store_bytes"] = self._resident_bytes
                 self._cv.notify_all()               # wake backpressured submits
             w, exc, dispatch_s = None, None, 0.0
             try:
-                w, exc, dispatch_s = tenant.lane.launch_panel(
-                    chunk, self._pacer, self._make_on_retire(tenant.name))
+                if needs_reload:
+                    exc = self._reload_store(tenant)
+                if exc is None:
+                    w, exc, dispatch_s = tenant.lane.launch_panel(
+                        chunk, self._pacer, self._make_on_retire(tenant.name))
             finally:
                 with self._cv:
                     tenant.in_launch = False

@@ -203,8 +203,12 @@ def pcg_tree_ordered(tree, plan, kernel, k: int, use_pallas: bool,
     points : jnp.ndarray, shape (n_pad, d)
         Tree-ordered coordinates, passed as a runtime argument (NOT a traced
         constant — see :func:`repro.core.hmatrix.make_apply`).
-    factors : dict | None
-        ``level -> (U, V)`` stored ACA factors (P mode) or None (NP mode).
+    factors : FactorStore | dict | None
+        Stored ACA factors (P mode) — a
+        :class:`repro.core.factor_store.FactorStore` or a legacy
+        ``level -> (U, V)`` dict — or None (NP mode).  Flows through
+        the ``while_loop`` body untouched as a pytree of packed level
+        groups.
     chol_arg : jnp.ndarray | None
         Block-Jacobi factors from :func:`build_preconditioner`, or None for
         plain CG.

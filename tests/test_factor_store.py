@@ -1,0 +1,297 @@
+"""FactorStore: packed storage, batched_recompress, and the memory tier.
+
+Five contracts:
+
+* the store is a DROP-IN for the legacy ``{level: (U, V)}`` dict —
+  apply and solve results are bit-identical on both builders across the
+  shared geometry edge cases (``CASES`` in ``test_build_device``);
+* the ``batched_recompress`` Pallas kernel matches its ``ref.py`` oracle
+  (same retained ranks, reconstruction within tolerance);
+* recompression error tracks the requested tolerance across a tol sweep;
+* the clamped (``aca_adaptive``) and padded (``batched_aca_level``)
+  producers agree on the per-level rank table at the store boundary,
+  and ``FactorStore.from_factors`` rejects a table the arrays contradict;
+* the tenancy memory tier: LRU spill under a device-bytes budget and
+  transparent reload return bit-identical results to an unevicted run,
+  and residency accounting never exceeds the budget while victims exist.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FactorStore, build_hmatrix, build_hmatrix_device,
+                        effective_ranks, halton, make_apply, pad_adaptive,
+                        recompress_store)
+from repro.core.aca import aca_adaptive
+from repro.kernels.batched_recompress.ops import batched_recompress
+from repro.kernels.batched_recompress.ref import batched_recompress_ref
+from repro.solve import make_solver
+
+from test_build_device import CASES
+
+BUILDERS = {"host": build_hmatrix, "device": build_hmatrix_device}
+
+
+@pytest.fixture()
+def rng():
+    # shadow the session-scoped stream (see test_build_device)
+    return np.random.RandomState(11)
+
+
+def _legacy(hm):
+    """The same H-matrix with its factors demoted to the legacy dict."""
+    factors = hm.factors
+    legacy = {lvl: factors[lvl] for lvl in factors} if factors else factors
+    return dataclasses.replace(hm, factors=legacy)
+
+
+# ---------------------------------------------------------------------------
+# store == legacy dict, bit for bit, on every geometry edge case
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("builder", sorted(BUILDERS))
+def test_store_apply_bit_identical_to_legacy(builder, case, rng):
+    factory, c_leaf, eta = CASES[case]
+    hm = BUILDERS[builder](factory(), c_leaf=c_leaf, eta=eta, k=8,
+                           precompute=True)
+    assert isinstance(hm.factors, FactorStore)
+    x = jnp.asarray(rng.randn(hm.tree.n, 3).astype(np.float32))
+    z_store = np.asarray(make_apply(hm)(x))
+    z_legacy = np.asarray(make_apply(_legacy(hm))(x))
+    np.testing.assert_array_equal(z_store, z_legacy)
+
+
+@pytest.mark.parametrize("builder", sorted(BUILDERS))
+def test_store_solve_bit_identical_to_legacy(builder, rng):
+    factory, c_leaf, eta = CASES["nonpow2-3d"]
+    hm = BUILDERS[builder](factory(), c_leaf=c_leaf, eta=eta, k=12,
+                           precompute=True)
+    F = jnp.asarray(rng.randn(hm.tree.n, 2).astype(np.float32))
+    cs, infs = make_solver(hm, 0.5, tol=1e-5, max_iter=200)(F)
+    cl, infl = make_solver(_legacy(hm), 0.5, tol=1e-5, max_iter=200)(F)
+    assert infs.converged and infl.converged
+    assert int(infs.iterations) == int(infl.iterations)
+    np.testing.assert_array_equal(np.asarray(cs), np.asarray(cl))
+
+
+def test_nbytes_matches_array_metadata():
+    factory, c_leaf, eta = CASES["halton2d"]
+    hm = build_hmatrix(factory(), c_leaf=c_leaf, eta=eta, k=8,
+                       precompute=True)
+    nb = hm.factors.nbytes()
+    want = sum(u.nbytes + v.nbytes for u, v in hm.factors.values())
+    assert nb["low_rank"] == want
+    assert nb["total"] == nb["low_rank"] + nb["ranks"] + nb["dense"]
+    assert nb["total"] == sum(nb["per_level"].values()) + nb["ranks"] \
+        + nb["dense"]
+
+
+# ---------------------------------------------------------------------------
+# batched_recompress kernel vs ref oracle, and the tol sweep
+# ---------------------------------------------------------------------------
+
+
+def _decaying_factors(rng, b=6, m=48, n=40, k=12):
+    """Batched factors with a geometric singular-value decay."""
+    scale = (0.35 ** np.arange(k)).astype(np.float32)
+    u = jnp.asarray(rng.randn(b, m, k).astype(np.float32) * scale)
+    v = jnp.asarray(rng.randn(b, n, k).astype(np.float32))
+    return u, v
+
+
+@pytest.mark.parametrize("tol", [1e-1, 1e-2, 1e-3])
+def test_batched_recompress_matches_ref_oracle(tol, rng):
+    u, v = _decaying_factors(rng)
+    a0 = np.asarray(u @ jnp.swapaxes(v, -1, -2))
+    scale = np.linalg.norm(a0.reshape(a0.shape[0], -1), axis=1)
+
+    u2, v2, ranks = batched_recompress(u, v, tol)
+    ur, vr, rr = batched_recompress_ref(u, v, tol)
+    np.testing.assert_array_equal(np.asarray(ranks), np.asarray(rr))
+
+    for u_t, v_t in ((u2, v2), (ur, vr)):
+        a_t = np.asarray(u_t @ jnp.swapaxes(v_t, -1, -2))
+        err = np.linalg.norm((a_t - a0).reshape(a0.shape[0], -1), axis=1)
+        assert (err <= 2.0 * tol * scale).all()
+
+
+def test_recompress_tol_sweep_error_bound(rng):
+    pts = np.asarray(halton(1200, 2)) * 8.0
+    hm = build_hmatrix(pts, k=16, c_leaf=128, precompute=True)
+    x = jnp.asarray(rng.randn(hm.tree.n, 2).astype(np.float32))
+    y0 = np.asarray(make_apply(hm)(x))
+
+    errs = []
+    for tol in (1e-1, 1e-2, 1e-3):
+        hm_t = build_hmatrix(pts, k=16, c_leaf=128, precompute=True,
+                             recompress_tol=tol)
+        y = np.asarray(make_apply(hm_t)(x))
+        rel = float(np.linalg.norm(y - y0) / np.linalg.norm(y0))
+        assert rel <= 5.0 * tol
+        errs.append(rel)
+        assert hm_t.factors.nbytes()["total"] <= hm.factors.nbytes()["total"]
+    assert errs[-1] <= errs[0]          # tighter tol -> closer answers
+
+
+def test_recompress_store_reports_byte_drop():
+    factory, c_leaf, eta = CASES["halton2d"]
+    hm = build_hmatrix(factory(), c_leaf=c_leaf, eta=eta, k=16,
+                       precompute=True)
+    before = hm.factors.nbytes()["total"]
+    report = recompress_store(hm.factors, 1e-2)
+    assert report.bytes_before == before
+    assert report.bytes_after == hm.factors.nbytes()["total"]
+    assert report.bytes_after < report.bytes_before
+    for lvl, (k_old, k_new) in report.per_level_k.items():
+        assert 1 <= k_new <= k_old
+        assert int(np.asarray(hm.factors.rank_table(lvl)).max()) <= k_new
+
+
+# ---------------------------------------------------------------------------
+# clamped vs padded producers at the store boundary
+# ---------------------------------------------------------------------------
+
+
+def test_rank_table_agrees_below_pad_width(rng):
+    """A level whose TRUE ranks all sit below the pad width: the clamped
+    ``aca_adaptive`` ranks, bridged through ``pad_adaptive``, must land on
+    the same table ``effective_ranks`` measures from the padded arrays."""
+    k_pad, true_rank = 12, 3
+    mats = rng.randn(40, 36, true_rank) @ rng.randn(40, true_rank, 36)
+    pu, pv, clamped = [], [], []
+    for a in mats:
+        u, v, rank = aca_adaptive(a, eps=1e-8, k_max=k_pad)
+        assert rank < k_pad             # the premise of this regression
+        up, vp = pad_adaptive(u, v, rank, k_pad)
+        pu.append(up.astype(np.float32))
+        pv.append(vp.astype(np.float32))
+        clamped.append(rank)
+    U, V = jnp.asarray(np.stack(pu)), jnp.asarray(np.stack(pv))
+    clamped = np.asarray(clamped, np.int32)
+
+    measured = np.asarray(effective_ranks(U, V))
+    np.testing.assert_array_equal(measured, clamped)
+
+    store = FactorStore.from_factors({2: (U, V)}, ranks={2: clamped})
+    np.testing.assert_array_equal(np.asarray(store.rank_table(2)), clamped)
+
+    # a table the arrays contradict (claims BELOW the nonzero columns)
+    # must be rejected at construction, not silently trusted
+    with pytest.raises(ValueError, match="claimed rank"):
+        FactorStore.from_factors({2: (U, V)},
+                                 ranks={2: np.maximum(clamped - 1, 0)})
+
+
+def test_pad_adaptive_rejects_overwide_rank():
+    u, v = np.ones((8, 5)), np.ones((7, 5))
+    with pytest.raises(ValueError, match="exceeds pad width"):
+        pad_adaptive(u, v, 5, 4)
+
+
+# ---------------------------------------------------------------------------
+# spill / reload and the tenancy eviction tier
+# ---------------------------------------------------------------------------
+
+
+def test_spill_reload_roundtrip_bitwise():
+    factory, c_leaf, eta = CASES["halton2d"]
+    hm = build_hmatrix(factory(), c_leaf=c_leaf, eta=eta, k=8,
+                       precompute=True)
+    store = hm.factors
+    before = {lvl: (np.asarray(u), np.asarray(v))
+              for lvl, (u, v) in store.items()}
+
+    freed = store.spill()
+    assert store.is_spilled and freed > 0
+    with pytest.raises(RuntimeError, match="spilled"):
+        jax.tree_util.tree_flatten(store)
+
+    assert store.reload() == freed
+    assert not store.is_spilled
+    for lvl, (u0, v0) in before.items():
+        u1, v1 = store[lvl]
+        assert isinstance(u1, jax.Array)
+        np.testing.assert_array_equal(u0, np.asarray(u1))
+        np.testing.assert_array_equal(v0, np.asarray(v1))
+
+
+def _store_specs(n, n_tenants, k=8, c_leaf=64, max_batch=4):
+    from repro.serve.tenancy import apply_tenant
+
+    specs = []
+    for i in range(n_tenants):
+        pts = np.asarray(halton(n, 2)) * (1.0 + 0.3 * i)
+        hm = build_hmatrix(pts, k=k, c_leaf=c_leaf, precompute=True)
+        specs.append(apply_tenant(hm, max_batch=max_batch))
+    return specs
+
+
+def _serve(specs, queries, plan, budget):
+    from repro.serve.tenancy import MultiTenantRuntime
+
+    with MultiTenantRuntime(device_bytes_budget=budget) as mtr:
+        handles = [mtr.add_tenant(f"t{i}", s) for i, s in enumerate(specs)]
+        futures = [handles[plan[j]].submit(q) for j, q in enumerate(queries)]
+        mtr.flush()
+        results = [np.asarray(f.result()) for f in futures]
+        glob = mtr.stats()
+        per = {h.name: dict(h.stats()) for h in handles}
+    return results, glob, per
+
+
+def test_spill_reload_bit_identical_under_skewed_traffic(rng):
+    """10:1 tenant skew under a budget that forces evictions: every panel
+    must match the unevicted run bit for bit, and the reload stats must
+    show the tier actually engaged."""
+    n, n_tenants, n_requests = 384, 3, 44
+    specs = _store_specs(n, n_tenants)
+    per_tenant = specs[0].store.nbytes()["total"]
+    budget = per_tenant * n_tenants - per_tenant // 2
+
+    queries = [rng.randn(n).astype(np.float32) for _ in range(n_requests)]
+    # tenant 0 takes 10 of every 11 requests; cold tenants are the LRU
+    # victims and each light request to a spilled one forces a reload
+    plan = [0 if j % 11 else 1 + (j // 11) % (n_tenants - 1)
+            for j in range(n_requests)]
+
+    res_b, glob_b, per_b = _serve(specs, queries, plan, budget)
+    res_u, glob_u, _ = _serve(specs, queries, plan, None)
+
+    assert glob_b["evictions"] >= 1
+    assert glob_b["reloads"] >= 1
+    assert any(p["spills"] >= 1 for p in per_b.values())
+    reloaded = [p for p in per_b.values() if p["reloads"] >= 1]
+    assert reloaded and all(p["reload_s"] > 0 for p in reloaded)
+    for a, b in zip(res_b, res_u):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_eviction_respects_byte_budget(rng):
+    from repro.serve.tenancy import MultiTenantRuntime
+
+    n, n_tenants = 384, 3
+    specs = _store_specs(n, n_tenants)
+    per_tenant = specs[0].store.nbytes()["total"]
+    budget = 2 * per_tenant             # room for two of three stores
+
+    with MultiTenantRuntime(device_bytes_budget=budget) as mtr:
+        handles = [mtr.add_tenant(f"t{i}", s) for i, s in enumerate(specs)]
+        assert mtr.stats["device_store_bytes"] <= budget
+        for h in handles:               # touch every tenant, one at a time
+            h.submit(rng.randn(n).astype(np.float32))
+            h.drain()                   # <=1 launch in flight: victim
+                                        # selection is never starved, so
+                                        # the budget must hold exactly
+        glob = mtr.stats()
+        per = {h.name: dict(h.stats()) for h in handles}
+
+    assert glob["budget_bytes"] == budget
+    assert glob["evictions"] >= 1
+    assert glob["device_store_bytes"] <= budget
+    resident_bytes = sum(p["nbytes"] for p in per.values() if p["resident"])
+    assert resident_bytes == glob["device_store_bytes"]
