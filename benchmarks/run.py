@@ -26,9 +26,9 @@ import time
 import traceback
 
 from . import (bench_batching, bench_build, bench_chaos, bench_compare,
-               bench_complexity, bench_convergence, bench_matmat,
-               bench_memory, bench_roofline, bench_serve, bench_shard,
-               bench_solve, bench_tenancy)
+               bench_complexity, bench_convergence, bench_harith,
+               bench_matmat, bench_memory, bench_roofline, bench_serve,
+               bench_shard, bench_solve, bench_tenancy)
 
 
 def _suites(args) -> list:
@@ -47,6 +47,7 @@ def _suites(args) -> list:
             ("tenancy", lambda: bench_tenancy.run(smoke=True)),
             ("chaos", lambda: bench_chaos.run(smoke=True)),
             ("memory", lambda: bench_memory.run(smoke=True)),
+            ("harith", lambda: bench_harith.run(smoke=True)),
             ("fig16-17", lambda: bench_compare.run(n=1024)),
             ("roofline", lambda: bench_roofline.run()),
         ]
@@ -70,6 +71,8 @@ def _suites(args) -> list:
          else bench_chaos.run()),
         ("memory", lambda: bench_memory.run(smoke=True) if args.quick
          else bench_memory.run()),
+        ("harith", lambda: bench_harith.run(n=4096, smoke=False)
+         if args.quick else bench_harith.run()),
         ("fig16-17", lambda: bench_compare.run(n=4096 if args.quick else 8192)),
         ("roofline", lambda: bench_roofline.run()),
     ]
@@ -105,6 +108,34 @@ def _lint_preflight() -> dict:
     print(f"# hlint pre-flight: clean "
           f"({report['baselined']} baselined finding(s))")
     return report
+
+
+_HEADLINE_KEYS = ("iterations", "qps", "speedup", "p50_ms", "p95_ms",
+                  "nbytes", "t_s", "solve_s", "setup_s", "exponent",
+                  "iteration_cut", "solve_speedup", "precond_nbytes",
+                  "bytes_per_tenant", "multi_vs_single_qps", "speedup_vs_host")
+
+
+def _headline(ret) -> dict | None:
+    """Flatten a suite's returned record into scalar headline metrics.
+
+    One level of nesting is enough for every registered bench (variant /
+    per-tenant sub-dicts); only whitelisted metric keys are kept so the
+    trajectory record stays a diffable summary, not a second copy of the
+    per-suite JSON artifacts.
+    """
+    if not isinstance(ret, dict):
+        return None
+    flat = {}
+    for key, val in ret.items():
+        if isinstance(val, dict):
+            for k2, v2 in val.items():
+                if k2 in _HEADLINE_KEYS and isinstance(v2, (int, float, bool)):
+                    flat[f"{key}.{k2}"] = round(v2, 6) if isinstance(
+                        v2, float) else v2
+        elif key in _HEADLINE_KEYS and isinstance(val, (int, float, bool)):
+            flat[key] = round(val, 6) if isinstance(val, float) else val
+    return flat or None
 
 
 def _git_commit() -> str | None:
@@ -149,9 +180,15 @@ def main() -> None:
     for name, fn in _suites(args):
         t0 = time.perf_counter()
         try:
-            fn()
+            ret = fn()
             statuses[name] = {"status": "ok",
                               "seconds": round(time.perf_counter() - t0, 3)}
+            metrics = _headline(ret)
+            if metrics:
+                # per-bench headline metrics ride in the trajectory record,
+                # so a perf regression diffs commit-over-commit without
+                # opening the per-suite JSON artifacts
+                statuses[name]["metrics"] = metrics
         except Exception:
             failed.append(name)
             statuses[name] = {"status": "failed",

@@ -24,7 +24,8 @@ DOCS = [ROOT / "README.md", ROOT / "docs" / "ARCHITECTURE.md",
         ROOT / "docs" / "DEVICE_DISCIPLINE.md",
         ROOT / "docs" / "RESILIENCE.md",
         ROOT / "docs" / "CONSTRUCTION.md",
-        ROOT / "docs" / "MEMORY.md"]
+        ROOT / "docs" / "MEMORY.md",
+        ROOT / "docs" / "ARITHMETIC.md"]
 # module roots for `python -m` resolution (PYTHONPATH=src convention + repo root)
 MODULE_ROOTS = [ROOT, ROOT / "src"]
 # path references may be repo-relative or package-relative (docs talk in layers)

@@ -115,16 +115,31 @@ def diagonal_blocks(hm: HMatrix) -> jnp.ndarray:
     Returns a ``(n_leaf, c, c)`` batch of kernel blocks — the (always
     inadmissible) diagonal of the leaf partition, gathered with the same
     reshape machinery as the dense-leaf apply.  This is the raw material of
-    the block-Jacobi preconditioner in ``repro.solve`` (add ``sigma2 * I``
-    and factorize).  Blocks covering the padded tail contain duplicated
-    points (rank-deficient), so shift by a positive ``sigma2`` before any
-    factorization.
+    the block-Jacobi preconditioner in ``repro.solve`` and of the diagonal
+    FACTOR tasks of the H-LU engine (``repro.harith``): add ``sigma2 * I``
+    and factorize.
+
+    Ragged last leaf: the tree pads ``n`` to ``n_pad`` by duplicating the
+    last point, so blocks covering the padded tail would otherwise contain
+    duplicated-point rows that COUPLE real rows with phantom ones (and are
+    exactly rank-deficient).  Here the pad rows/cols are masked to zero
+    and their diagonal entries set to 1 — each returned block is the true
+    principal submatrix of its real rows plus decoupled unit pad rows, so
+    a ``sigma2``-shifted factorization is SPD for any leaf raggedness.
     """
     plan = hm.plan
     c = plan.c_leaf
     n_leaf = plan.n_pad // c
     pts = hm.tree.points.reshape(n_leaf, c, -1)
-    return hm.kernel(pts, pts)
+    blocks = hm.kernel(pts, pts)
+    n = hm.tree.n
+    if n == plan.n_pad:
+        return blocks
+    valid = (jnp.arange(plan.n_pad) < n).reshape(n_leaf, c)
+    mask = valid[:, :, None] & valid[:, None, :]
+    blocks = jnp.where(mask, blocks, 0.0)
+    eye = jnp.eye(c, dtype=blocks.dtype)[None]
+    return blocks + eye * (~valid)[:, :, None].astype(blocks.dtype)
 
 
 # ---------------------------------------------------------------------------

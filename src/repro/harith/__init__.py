@@ -1,0 +1,29 @@
+"""H-arithmetic: task-DAG scheduled factorization and triangular solves.
+
+The level-order batching used everywhere else in this repo (construction,
+matvec, fused PCG) works because those algorithms have no dependencies
+*between* blocks of one level.  H-LU does: a Schur update cannot run
+before the triangular solves that produce its operands, which cannot run
+before the diagonal factorization of their elimination column.  This
+package derives that dependency DAG from the block partition
+(:mod:`repro.harith.taskgraph`), levels it into ready-sets, batches each
+ready-set into fixed-shape device launches, and executes the whole
+schedule as one jitted program (:mod:`repro.harith.hlu`).  The resulting
+approximate H-Cholesky factorization plugs into the fused PCG solver as
+a preconditioner (:mod:`repro.harith.precond`).
+
+See ``docs/ARITHMETIC.md`` for the derivation walkthrough.
+"""
+from .hlu import (HLUFactors, assemble_lower, factorize_hlu,
+                  hlu_solve_panels)
+from .precond import HLUPreconditioner, make_hlu_preconditioner
+from .taskgraph import (HLUSchedule, HLUTaskGraph, ScheduleStep, Task,
+                        TileGrid, build_schedule, build_taskgraph,
+                        build_tile_grid)
+
+__all__ = [
+    "HLUFactors", "HLUPreconditioner", "HLUSchedule", "HLUTaskGraph",
+    "ScheduleStep", "Task", "TileGrid", "assemble_lower", "build_schedule",
+    "build_taskgraph", "build_tile_grid", "factorize_hlu",
+    "hlu_solve_panels", "make_hlu_preconditioner",
+]

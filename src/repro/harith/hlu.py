@@ -1,0 +1,423 @@
+"""Batched on-device H-Cholesky execution of the task-DAG schedule.
+
+:func:`factorize_hlu` compiles the ENTIRE factorization — tile
+initialization, every elimination step, every truncation — into one
+jitted program: a Python loop over the schedule's signature RUNS, each
+run a ``lax.scan`` whose carry is the three tile buffers and whose xs
+are the stacked per-step gather/scatter tables.  Each scan body executes
+one merged elimination step:
+
+    FACTOR  one diagonal tile     (kernels/batched_block_solve Cholesky)
+    TRSM    the elimination column (kernels/batched_trsm_lowrank), dense
+            tiles as transposed panels, low-rank tiles by their V factor
+            only (``u v^T L_tt^{-T} = u (L_tt^{-1} v)^T``)
+    SCHUR   the trailing submatrix (kernels/batched_schur_update):
+            dense targets by ``C -= A B^T``; low-rank targets by
+            concatenation + re-truncation to the working width ``kp``
+
+All slots are power-of-two padded onto an all-zero SCRATCH tile (see
+``taskgraph``), so every step of a run launches with identical shapes —
+the run compiles once and scans.  The Schur chain serializes each
+target's accumulation, so the factorization is bit-reproducible
+run-to-run.
+
+The factorized target matrix is the PAD-DECOUPLED tree-ordered system
+
+    A_hat = [[A + sigma^2 I, 0], [0, I]]
+
+(real rows/cols of the kernel matrix plus shift; padded tail rows are
+exact unit rows) — the same masking semantics as ``core.hmatrix
+.diagonal_blocks``, so the preconditioner solve composes with the fused
+PCG's pad masking without coupling phantom rows into real ones.
+
+Points and ACA factors enter as runtime jit ARGUMENTS (not closures):
+with closure capture XLA constant-folds the entire factorization at
+compile time (see ``core.hmatrix.make_apply``).  The static index
+tables ARE closures — they are the compiled program's structure.
+
+:func:`hlu_solve_panels` applies ``(L L^T)^{-1}`` to a tree-ordered
+panel with two ``fori_loop`` block-substitution sweeps over static
+padded gather tables — traceable, so the fused PCG inlines it in its
+``while_loop`` (``repro.solve.cg``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.aca import batched_aca
+from repro.core.factor_store import effective_ranks
+
+from .taskgraph import (HLUSchedule, SolveTables, TileGrid, build_schedule,
+                        build_solve_tables, build_tile_grid)
+
+
+class HLUMeta:
+    """Static structure of one factorization: grid, schedule, solve
+    tables, widths.  Identity-hashed on purpose — it rides in the
+    pytree aux of :class:`HLUFactors`, and jit caches per factorization
+    instance (one instance per solver, so one compile)."""
+
+    __slots__ = ("grid", "schedule", "tables", "kp", "tol", "sigma2",
+                 "n", "n_pad", "use_pallas")
+
+    def __init__(self, grid: TileGrid, schedule: HLUSchedule,
+                 tables: SolveTables, kp: int, tol: float, sigma2: float,
+                 n: int, n_pad: int, use_pallas: bool):
+        self.grid = grid
+        self.schedule = schedule
+        self.tables = tables
+        self.kp = kp
+        self.tol = tol
+        self.sigma2 = sigma2
+        self.n = n
+        self.n_pad = n_pad
+        self.use_pallas = use_pallas
+
+
+@jax.tree_util.register_pytree_node_class
+class HLUFactors:
+    """Approximate H-Cholesky factors as three packed tile buffers.
+
+    dense : (n_dense + 1, c, c) — factored diagonal tiles (lower
+            Cholesky), dense off-diagonal ``L`` tiles, and one trailing
+            all-zero scratch tile.
+    ulr / vlr : (n_lr + 1, c, kp) — low-rank ``L`` tile panels
+            (``L_ij = u v^T``) plus the scratch panel.
+
+    Registered pytree: flows through jit arguments like the block-Jacobi
+    ``chol`` array does in ``repro.solve.cg`` — the static
+    :class:`HLUMeta` rides in the aux.
+    """
+
+    __slots__ = ("dense", "ulr", "vlr", "meta")
+
+    def __init__(self, dense, ulr, vlr, meta: HLUMeta):
+        self.dense = dense
+        self.ulr = ulr
+        self.vlr = vlr
+        self.meta = meta
+
+    def tree_flatten(self):
+        return (self.dense, self.ulr, self.vlr), self.meta
+
+    @classmethod
+    def tree_unflatten(cls, meta, children):
+        return cls(*children, meta)
+
+    def nbytes(self) -> int:
+        return int(self.dense.nbytes + self.ulr.nbytes + self.vlr.nbytes)
+
+    def rank_stats(self) -> dict:
+        """Effective-rank distribution of the low-rank L tiles (syncs)."""
+        if self.ulr.shape[0] <= 1:
+            return {"max": 0, "mean": 0.0, "kp": int(self.meta.kp)}
+        ranks = np.asarray(effective_ranks(self.ulr[:-1], self.vlr[:-1]))
+        return {"max": int(ranks.max()), "mean": float(ranks.mean()),
+                "kp": int(self.meta.kp)}
+
+
+def _kernels(use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.batched_block_solve.ops import batched_block_cholesky
+        from repro.kernels.batched_schur_update.ops import (
+            batched_schur_dense, batched_schur_retruncate)
+        from repro.kernels.batched_trsm_lowrank.ops import batched_trsm_panels
+        return (batched_block_cholesky, batched_trsm_panels,
+                batched_schur_dense, batched_schur_retruncate)
+    from repro.kernels.batched_block_solve.ref import batched_block_cholesky_ref
+    from repro.kernels.batched_schur_update.ref import (
+        batched_schur_dense_ref, batched_schur_retruncate_ref)
+    from repro.kernels.batched_trsm_lowrank.ref import batched_trsm_panels_ref
+    return (batched_block_cholesky_ref, batched_trsm_panels_ref,
+            batched_schur_dense_ref, batched_schur_retruncate_ref)
+
+
+def _init_tiles(meta: HLUMeta, plan, kernel, k: int, points, factors):
+    """Gather/evaluate every lower-triangle tile into the packed buffers.
+
+    Dense tiles (inadmissible leaves AND promoted fill-in targets) are
+    evaluated directly from the kernel; low-rank tiles are ``(c, k)``
+    slices of their admissible ancestor's ACA factors — from the stored
+    ``factors`` (P mode) or recomputed for exactly the needed blocks
+    (NP mode).  Pad rows/cols are zeroed and pad diagonal entries set to
+    1 (the pad-decoupled target system, see module docstring).
+    """
+    grid, kp, sigma2 = meta.grid, meta.kp, meta.sigma2
+    t_tiles, c = grid.t, grid.c
+    dtype = points.dtype
+    pts = points.reshape(t_tiles, c, -1)
+    valid = None
+    if meta.n < meta.n_pad:
+        valid = (jnp.arange(meta.n_pad) < meta.n).reshape(t_tiles, c)
+
+    ii, jj = grid.dense_pairs[:, 0], grid.dense_pairs[:, 1]
+    blocks = kernel(pts[ii], pts[jj])                      # (n_dense, c, c)
+    diag_sel = (ii == jj)[:, None, None]
+    eye = jnp.eye(c, dtype=dtype)[None]
+    if valid is not None:
+        mask = valid[ii][:, :, None] & valid[jj][:, None, :]
+        blocks = jnp.where(mask, blocks, 0.0)
+        diag_add = jnp.where(valid[ii], sigma2, 1.0)[:, :, None]
+    else:
+        diag_add = jnp.full((len(ii), c, 1), sigma2, dtype)
+    blocks = blocks + jnp.where(diag_sel, eye * diag_add, 0.0)
+    dense = jnp.concatenate(
+        [blocks, jnp.zeros((1, c, c), dtype)], axis=0)
+
+    ulr = jnp.zeros((grid.n_lr + 1, c, kp), dtype)
+    vlr = jnp.zeros((grid.n_lr + 1, c, kp), dtype)
+    src = grid.lr_source
+    for level in sorted(np.unique(src[:, 0]).tolist()):
+        sel = src[:, 0] == level
+        ids = np.nonzero(sel)[0].astype(np.int32)
+        blk, roff, coff = src[sel, 1], src[sel, 2], src[sel, 3]
+        q = 1 << (plan.n_levels - level)
+        if factors is not None and level in factors:
+            u_lvl, v_lvl = factors[level]
+            need = np.arange(u_lvl.shape[0])
+        else:
+            # NP mode: run ACA for exactly the blocks the lower triangle
+            # needs (the upper-triangle mirrors are never touched)
+            need = np.unique(blk)
+            lvl_blocks = np.asarray(plan.aca_levels[level])[need]
+            m = q * c
+            pts_lvl = points.reshape(1 << level, m, -1)
+            u_lvl, v_lvl = batched_aca(pts_lvl[lvl_blocks[:, 0]],
+                                       pts_lvl[lvl_blocks[:, 1]], kernel, k)
+        k_lvl = int(u_lvl.shape[2])
+        if k_lvl > kp:
+            raise ValueError(f"level {level} rank {k_lvl} exceeds working "
+                             f"width kp={kp}; raise kp")
+        remap = np.searchsorted(need, blk)
+        u_t = u_lvl.reshape(len(need), q, c, k_lvl)[remap, roff]
+        v_t = v_lvl.reshape(len(need), q, c, k_lvl)[remap, coff]
+        if valid is not None:
+            ti, tj = grid.lr_pairs[ids, 0], grid.lr_pairs[ids, 1]
+            u_t = jnp.where(valid[ti][:, :, None], u_t, 0.0)
+            v_t = jnp.where(valid[tj][:, :, None], v_t, 0.0)
+        ulr = ulr.at[ids, :, :k_lvl].set(u_t)
+        vlr = vlr.at[ids, :, :k_lvl].set(v_t)
+    return dense, ulr, vlr
+
+
+def _make_run_body(meta: HLUMeta, signature):
+    """Scan body for one signature run: one merged elimination step."""
+    chol_fn, trsm_fn, schur_dense_fn, retrunc_fn = _kernels(meta.use_pallas)
+    kp, tol = meta.kp, meta.tol
+    sz = dict(zip(("trsm_d", "trsm_l", "sdd", "sll_d", "sll_l",
+                   "smx_d", "smx_l"), signature))
+
+    def lowrank_ab(ulr, vlr, dense, sll, smx):
+        """(a, b) update factors for the low-rank-product slots."""
+        out = []
+        if sll is not None:
+            ui, vi = ulr[sll[:, 0]], vlr[sll[:, 0]]
+            uj, vj = ulr[sll[:, 1]], vlr[sll[:, 1]]
+            gram = jnp.einsum("bck,bcl->bkl", vi, vj)      # v_i^T v_j
+            out.append((jnp.einsum("bck,bkl->bcl", ui, gram), uj,
+                        sll[:, 2]))
+        if smx is not None:
+            d_src = dense[smx[:, 0]]
+            u_l, v_l = ulr[smx[:, 1]], vlr[smx[:, 1]]
+            p = jnp.einsum("bcd,bdk->bck", d_src, v_l)     # D v
+            swap = (smx[:, 2] == 1)[:, None, None]
+            out.append((jnp.where(swap, u_l, p),
+                        jnp.where(swap, p, u_l), smx[:, 3]))
+        return out
+
+    def body(carry, xs):
+        dense, ulr, vlr = carry
+        fac, trsm_d, trsm_l, sdd, sll_d, sll_l, smx_d, smx_l = xs
+        c = dense.shape[1]
+
+        # -- FACTOR(t)
+        ltt = chol_fn(jnp.take(dense, fac[None], axis=0))  # (1, c, c)
+        dense = dense.at[fac].set(ltt[0])
+
+        # -- TRSM(i, t): dense tiles as transposed panels, low-rank by V
+        if sz["trsm_d"]:
+            idx = trsm_d[:, 0]
+            ltt_b = jnp.broadcast_to(ltt, (sz["trsm_d"], c, c))
+            y = trsm_fn(ltt_b, jnp.swapaxes(dense[idx], 1, 2))
+            dense = dense.at[idx].set(jnp.swapaxes(y, 1, 2))
+        if sz["trsm_l"]:
+            idx = trsm_l[:, 0]
+            ltt_b = jnp.broadcast_to(ltt, (sz["trsm_l"], c, c))
+            vlr = vlr.at[idx].set(trsm_fn(ltt_b, vlr[idx]))
+
+        # -- SCHUR(i, j, t): dense x dense products onto dense targets
+        if sz["sdd"]:
+            y = schur_dense_fn(dense[sdd[:, 2]], dense[sdd[:, 0]],
+                               dense[sdd[:, 1]])
+            dense = dense.at[sdd[:, 2]].set(y)
+
+        # -- SCHUR: low-rank products onto dense targets
+        for a, b, tgt in lowrank_ab(
+                ulr, vlr, dense,
+                sll_d if sz["sll_d"] else None,
+                smx_d if sz["smx_d"] else None):
+            y = schur_dense_fn(dense[tgt], a, b)
+            dense = dense.at[tgt].set(y)
+
+        # -- SCHUR: low-rank products onto low-rank targets
+        # (concat + re-truncate; the chain dep serializes each target)
+        for a, b, tgt in lowrank_ab(
+                ulr, vlr, dense,
+                sll_l if sz["sll_l"] else None,
+                smx_l if sz["smx_l"] else None):
+            u_cat = jnp.concatenate([ulr[tgt], -a], axis=2)
+            v_cat = jnp.concatenate([vlr[tgt], b], axis=2)
+            u2, v2 = retrunc_fn(u_cat, v_cat, tol, kp)
+            ulr = ulr.at[tgt].set(u2)
+            vlr = vlr.at[tgt].set(v2)
+
+        return (dense, ulr, vlr), None
+
+    return body
+
+
+def _stack_run(steps, idxs):
+    fields = ("trsm_d", "trsm_l", "sdd", "sll_d", "sll_l", "smx_d", "smx_l")
+    fac = np.asarray([steps[i].fac_id for i in idxs], np.int32)
+    return (fac,) + tuple(
+        np.stack([getattr(steps[i], name) for i in idxs])
+        for name in fields)
+
+
+def factorize_hlu(hm, sigma2: float, *, tol: float = 1e-3,
+                  kp: int | None = None, use_pallas: bool = False,
+                  _plan_only: bool = False):
+    """Approximate H-Cholesky ``A_hat ~= L L^T`` of the pad-decoupled
+    shifted system, executed as one jitted scan-over-runs program.
+
+    Parameters
+    ----------
+    hm : repro.core.hmatrix.HMatrix
+        Assembled H-matrix (SPD kernel + shift).  Stored factors are
+        sliced (P mode); otherwise ACA runs for the needed blocks
+        inside the program (NP mode).
+    sigma2 : float
+        Regularization shift (must make the system SPD, as in the
+        fused PCG).
+    tol : float, optional
+        Relative per-block truncation tolerance of the Schur
+        re-truncations (the factorization accuracy knob).
+    kp : int, optional
+        Working panel width of the low-rank L tiles; default twice the
+        input rank, so one Schur absorption never truncates below the
+        input accuracy before the SVD sees it.
+    use_pallas : bool, optional
+        Route the tile kernels through the Pallas paths.
+
+    Returns
+    -------
+    factors : HLUFactors
+    """
+    plan, tree = hm.plan, hm.tree
+    grid = build_tile_grid(plan)
+    schedule = build_schedule(grid)
+    tables = build_solve_tables(grid)
+
+    k_max = hm.k
+    if hm.factors is not None:
+        widths = [int(hm.factors[lv][0].shape[2])
+                  for lv in np.unique(grid.lr_source[:, 0]).tolist()
+                  if lv in hm.factors]
+        k_max = max(widths, default=hm.k)
+    kp = int(kp) if kp is not None else max(2 * k_max, 2)
+    if kp < k_max:
+        raise ValueError(f"kp={kp} below input rank {k_max}")
+
+    meta = HLUMeta(grid=grid, schedule=schedule, tables=tables, kp=kp,
+                   tol=float(tol), sigma2=float(sigma2), n=tree.n,
+                   n_pad=tree.n_pad, use_pallas=use_pallas)
+    if _plan_only:
+        return meta
+    kernel, k = hm.kernel, hm.k
+
+    @jax.jit
+    def _factorize(points, factors):
+        dense, ulr, vlr = _init_tiles(meta, plan, kernel, k, points, factors)
+        carry = (dense, ulr, vlr)
+        for sig, idxs in schedule.runs:
+            xs = _stack_run(schedule.steps, idxs)
+            carry = lax.scan(_make_run_body(meta, sig), carry,
+                             tuple(jnp.asarray(x) for x in xs))[0]
+        return carry
+
+    dense, ulr, vlr = _factorize(tree.points, hm.factors)
+    return HLUFactors(dense, ulr, vlr, meta)
+
+
+def hlu_solve_panels(factors: HLUFactors, r_pad: jnp.ndarray) -> jnp.ndarray:
+    """Apply ``(L L^T)^{-1}`` to a tree-ordered panel ``(n_pad, R)``.
+
+    Two ``fori_loop`` sweeps over the static padded gather tables of
+    ``taskgraph.build_solve_tables``: forward block substitution row by
+    row (dense tiles as (c, c) matmuls, low-rank tiles as two skinny
+    contractions), then the transposed backward sweep.  Traceable — the
+    fused PCG inlines it per iteration.
+    """
+    meta = factors.meta
+    grid, tb = meta.grid, meta.tables
+    t_tiles, c = grid.t, grid.c
+    r_width = r_pad.shape[1]
+    dense, ulr, vlr = factors.dense, factors.ulr, factors.vlr
+    rb = r_pad.reshape(t_tiles, c, r_width)
+    diag_ids = jnp.asarray(tb.diag_ids)
+    row_d, row_dc = jnp.asarray(tb.row_dense), jnp.asarray(tb.row_dense_col)
+    row_l, row_lc = jnp.asarray(tb.row_lr), jnp.asarray(tb.row_lr_col)
+    col_d, col_dr = jnp.asarray(tb.col_dense), jnp.asarray(tb.col_dense_row)
+    col_l, col_lr = jnp.asarray(tb.col_lr), jnp.asarray(tb.col_lr_row)
+
+    def fwd(t, y):
+        acc = rb[t]
+        dn, yj = dense[row_d[t]], y[row_dc[t]]
+        acc = acc - jnp.einsum("pij,pjr->ir", dn, yj)
+        uu, vv, yl = ulr[row_l[t]], vlr[row_l[t]], y[row_lc[t]]
+        core = jnp.einsum("pck,pcr->pkr", vv, yl)          # v^T y
+        acc = acc - jnp.einsum("pck,pkr->cr", uu, core)    # u (v^T y)
+        yt = lax.linalg.triangular_solve(dense[diag_ids[t]], acc,
+                                         left_side=True, lower=True)
+        return y.at[t].set(yt)
+
+    def bwd(s, x):
+        t = t_tiles - 1 - s
+        acc = x[t]                                         # holds y_t
+        dn, xi = dense[col_d[t]], x[col_dr[t]]
+        acc = acc - jnp.einsum("pji,pjr->ir", dn, xi)      # D^T x
+        uu, vv, xl = ulr[col_l[t]], vlr[col_l[t]], x[col_lr[t]]
+        core = jnp.einsum("pck,pcr->pkr", uu, xl)          # u^T x
+        acc = acc - jnp.einsum("pck,pkr->cr", vv, core)    # v (u^T x)
+        xt = lax.linalg.triangular_solve(dense[diag_ids[t]], acc,
+                                         left_side=True, lower=True,
+                                         transpose_a=True)
+        return x.at[t].set(xt)
+
+    y = lax.fori_loop(0, t_tiles, fwd, jnp.zeros_like(rb))
+    x = lax.fori_loop(0, t_tiles, bwd, y)
+    return x.reshape(meta.n_pad, r_width)
+
+
+def assemble_lower(factors: HLUFactors) -> np.ndarray:
+    """Reassemble the full ``(n_pad, n_pad)`` lower-triangular L on host.
+
+    Test/debug oracle only (O(n_pad^2) memory): dense tiles are copied
+    (diagonal tiles tril'd), low-rank tiles expanded ``u v^T``.
+    """
+    grid = factors.meta.grid
+    c = grid.c
+    dense = np.asarray(factors.dense)
+    ulr, vlr = np.asarray(factors.ulr), np.asarray(factors.vlr)
+    out = np.zeros((grid.t * c, grid.t * c), dense.dtype)
+    for idx, (i, j) in enumerate(grid.dense_pairs):
+        blk = dense[idx]
+        if i == j:
+            blk = np.tril(blk)
+        out[i * c:(i + 1) * c, j * c:(j + 1) * c] = blk
+    for idx, (i, j) in enumerate(grid.lr_pairs):
+        out[i * c:(i + 1) * c, j * c:(j + 1) * c] = ulr[idx] @ vlr[idx].T
+    return out

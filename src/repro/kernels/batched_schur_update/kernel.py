@@ -1,0 +1,78 @@
+"""Pallas TPU kernels: batched Schur updates for the H-Cholesky schedule.
+
+Two target kinds, two kernels:
+
+* ``batched_schur_dense_t`` — dense target: one MXU contraction
+  ``C -= A B^T`` per program, entirely in VMEM.
+* ``batched_schur_retruncate_t`` — low-rank target: the caller has
+  already concatenated the update onto the target's panels
+  (``[u | -a]``, ``[v | b]``, width ``w = kp + p``); this kernel
+  re-truncates the widened pair back to working width ``kp`` by routing
+  through the batched recompression kernel (Gram + Cholesky + one-sided
+  Jacobi, see ``kernels/batched_recompress``) and slicing the
+  descending-sigma columns — re-truncation IS recompression at a wider
+  width, so the numerics ship in exactly one place.
+
+VMEM working set (f32): dense update C + A + B = (c^2 + 2 c p) * 4 B;
+c=512, p=64: ~1.3 MB.  Recompression budget is inherited from
+``batched_recompress`` (panels + (w, w) cores).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.batched_recompress.kernel import batched_recompress_t
+
+from .. import default_interpret
+
+
+def _schur_dense_kernel(c_ref, a_ref, b_ref, y_ref):
+    c = c_ref[0]                                   # (m, n)
+    a = a_ref[0]                                   # (m, p)
+    b = b_ref[0]                                   # (n, p)
+    y_ref[0] = c - jnp.dot(a, b.T, preferred_element_type=c.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_schur_dense_t(c: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """Y[b] = C[b] - A[b] B[b]^T.  c: (B, m, n), a: (B, m, p), b: (B, n, p)."""
+    if interpret is None:
+        interpret = default_interpret()
+    nb, m, n = c.shape
+    p = a.shape[2]
+    return pl.pallas_call(
+        _schur_dense_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m, p), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, m, n), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), c.dtype),
+        interpret=interpret,
+    )(c, a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("tol", "kp", "interpret"))
+def batched_schur_retruncate_t(u: jnp.ndarray, v: jnp.ndarray, tol: float,
+                               kp: int, interpret: bool | None = None):
+    """Truncate widened panels back to width ``kp`` via the Pallas
+    recompression kernel.  u: (B, m, w), v: (B, n, w) -> (B, m, kp) x2.
+
+    The recompression kernel emits columns unsorted; the sort by
+    descending sigma happens here (tiny (B, w) argsort) so the ``kp``
+    slice keeps the dominant subspace — same post-pass as
+    ``batched_recompress``'s dispatcher.
+    """
+    u2, v2, s_t = batched_recompress_t(u, v, float(tol), interpret=interpret)
+    s_t = s_t[:, 0, :]                             # (B, w)
+    order = jnp.argsort(-s_t, axis=1, stable=True)
+    u2 = jnp.take_along_axis(u2, order[:, None, :], axis=2)
+    v2 = jnp.take_along_axis(v2, order[:, None, :], axis=2)
+    return u2[:, :, :kp], v2[:, :, :kp]

@@ -1,0 +1,91 @@
+"""jit'd public wrappers for the batched Schur-update Pallas kernels.
+
+Dispatch follows the repo convention: working sets over the VMEM budget
+fall back to the jnp oracles, and the re-truncation path additionally
+honours the Gram-accuracy floor of the recompression kernel (tolerances
+below ~sqrt(eps_f32) route to the QR-based oracle — same rationale as
+``kernels/batched_recompress``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import force_ref
+from repro.kernels.batched_recompress.ops import GRAM_TOL_FLOOR
+
+from .kernel import batched_schur_dense_t, batched_schur_retruncate_t
+from .ref import batched_schur_dense_ref, batched_schur_retruncate_ref
+
+# Conservative VMEM budget for one program's working set (bytes).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _dense_vmem_bytes(m: int, n: int, p: int, itemsize: int = 4) -> int:
+    return itemsize * (2 * m * n + (m + n) * p)
+
+
+def _retrunc_vmem_bytes(m: int, n: int, w: int, itemsize: int = 4) -> int:
+    return itemsize * (2 * (m + n) * w + 8 * w * w)
+
+
+def batched_schur_dense(c: jnp.ndarray, a: jnp.ndarray,
+                        b: jnp.ndarray) -> jnp.ndarray:
+    """Dense-target Schur update ``Y[b] = C[b] - A[b] B[b]^T``.
+
+    One task batch of the H-Cholesky schedule (``repro.harith.hlu``):
+    ``A B^T`` is a dense x dense product (``p = c``) or a low-rank
+    product hitting a dense/promoted target (``p =`` working rank).
+
+    Parameters
+    ----------
+    c : jnp.ndarray, shape (B, m, n)
+        Gathered dense target tiles.
+    a : jnp.ndarray, shape (B, m, p)
+    b : jnp.ndarray, shape (B, n, p)
+        Update factors (the contribution is ``a @ b.T``).
+
+    Returns
+    -------
+    y : jnp.ndarray, shape (B, m, n)
+        Updated tiles, ready to scatter back.
+    """
+    nb, m, n = c.shape
+    p = a.shape[2]
+    if force_ref() or _dense_vmem_bytes(m, n, p) > VMEM_BUDGET:
+        return batched_schur_dense_ref(c, a, b)
+    return batched_schur_dense_t(c, a, b)
+
+
+def batched_schur_retruncate(u: jnp.ndarray, v: jnp.ndarray, tol: float,
+                             kp: int):
+    """Low-rank-target Schur update: truncate widened panels to ``kp``.
+
+    The caller absorbs the update by concatenation — ``u = [u_t | -a]``,
+    ``v = [v_t | b]`` of width ``w = kp + p`` — and this op recompresses
+    the pair to tolerance and re-packs to the schedule's fixed working
+    width.
+
+    Parameters
+    ----------
+    u : jnp.ndarray, shape (B, m, w)
+    v : jnp.ndarray, shape (B, n, w)
+        Concatenated target + update panels.
+    tol : float
+        Relative per-block truncation threshold (see
+        ``batched_recompress``).
+    kp : int
+        Working width to re-pack to (columns sorted by descending sigma
+        before the slice, so the dominant subspace survives).
+
+    Returns
+    -------
+    u2, v2 : jnp.ndarray, shapes (B, m, kp) / (B, n, kp)
+        Re-packed panels; columns past each block's surviving rank are
+        exactly zero.
+    """
+    nb, m, w = u.shape
+    n = v.shape[1]
+    if (force_ref() or tol < GRAM_TOL_FLOOR
+            or _retrunc_vmem_bytes(m, n, w) > VMEM_BUDGET):
+        return batched_schur_retruncate_ref(u, v, tol, kp)
+    return batched_schur_retruncate_t(u, v, float(tol), kp)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the batched Schur-update kernels.
+
+``batched_schur_dense_ref`` applies ``C -= A B^T`` on dense targets;
+``batched_schur_retruncate_ref`` absorbs a low-rank update into a
+low-rank target by concatenation + algebraic recompression (the QR/SVD
+truncation of ``batched_recompress``) and re-packs to the fixed working
+width the H-Cholesky schedule carries.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.batched_recompress.ref import batched_recompress_ref
+
+
+def batched_schur_dense_ref(c: jnp.ndarray, a: jnp.ndarray,
+                            b: jnp.ndarray) -> jnp.ndarray:
+    """Dense-target Schur update ``C[b] - A[b] B[b]^T`` per block.
+
+    c: (B, m, n) targets; a: (B, m, p), b: (B, n, p) — p is either the
+    tile width (dense x dense products) or the working rank (low-rank
+    products hitting a dense target).
+    """
+    return c - jnp.einsum("bip,bjp->bij", a, b)
+
+
+def batched_schur_retruncate_ref(u: jnp.ndarray, v: jnp.ndarray, tol: float,
+                                 kp: int):
+    """Truncate concatenated panels back to working width ``kp``.
+
+    u: (B, m, w), v: (B, n, w) with ``w = kp + p`` after the caller
+    concatenates the update ``[-a | b]`` onto the target's panels.
+    Returns ``(u2, v2)`` of width ``kp``: columns sorted by descending
+    singular value (so the slice keeps the dominant subspace), columns
+    past each block's surviving rank exactly zero.
+    """
+    u2, v2, _ = batched_recompress_ref(u, v, tol)
+    return u2[:, :, :kp], v2[:, :, :kp]

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: batched triangular solve against packed panels.
+
+The TRSM stage of the H-Cholesky task schedule (``repro.harith``): after
+FACTOR(t) produces ``L_tt``, every tile ``(i, t)`` of the elimination
+column is transformed as
+
+    low-rank tile  u v^T :  v' = L_tt^{-1} v        (P = working rank)
+    dense tile     D     :  D' = (L_tt^{-1} D^T)^T  (P = c)
+
+Both are the same primitive — a lower-triangular solve on a ``(c, P)``
+panel — so one kernel serves both slots.  One program per tile, entirely
+in VMEM: ``c`` forward-substitution axpy steps of O(c P) each (the
+``fwd`` sweep of ``batched_block_solve``'s Cholesky-solve kernel,
+without the transposed back sweep).
+
+VMEM working set per program (f32): L + X + Y = (c^2 + 2 c P) * 4 B.
+c=512, P=64: ~1.3 MB << 16 MB VMEM.  ``ops.py`` falls back to the jnp
+oracle above the budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .. import default_interpret
+
+_TINY = 1e-30  # pivot clamp: L comes from an SPD Cholesky (sigma^2 shift)
+
+
+def _trsm_kernel(l_ref, x_ref, y_ref):
+    l_mat = l_ref[0]                               # (c, c) lower
+    x = x_ref[0]                                   # (c, P)
+    c, p = x.shape
+    dtype = x.dtype
+    idx_col = lax.broadcasted_iota(jnp.int32, (c, 1), 0)
+
+    def fwd(j, carry):
+        y, xr = carry
+        l_col = lax.dynamic_slice(l_mat, (0, j), (c, 1))       # zeros above j
+        d = lax.dynamic_slice(l_mat, (j, j), (1, 1))
+        d = jnp.where(jnp.abs(d) > _TINY, d, jnp.asarray(_TINY, dtype))
+        yj = lax.dynamic_slice(xr, (j, 0), (1, p)) / d         # (1, P)
+        y = y + (idx_col == j).astype(dtype) * yj
+        xr = xr - l_col * yj
+        return y, xr
+
+    y, _ = lax.fori_loop(0, c, fwd, (jnp.zeros_like(x), x))    # L Y = X
+    y_ref[0] = y
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def batched_trsm_panels_t(l: jnp.ndarray, x: jnp.ndarray,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """Y[b] = L[b]^{-1} X[b].  l: (B, c, c) lower, x: (B, c, P)."""
+    if interpret is None:
+        interpret = default_interpret()
+    b, c, _ = l.shape
+    p = x.shape[2]
+    return pl.pallas_call(
+        _trsm_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c, c), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, c, p), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, p), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c, p), x.dtype),
+        interpret=interpret,
+    )(l, x)

@@ -1,0 +1,51 @@
+"""jit'd public wrapper for the batched panel-TRSM Pallas kernel.
+
+Same dispatch discipline as the other kernel packages: panels whose VMEM
+working set would overflow the budget fall back to the jnp oracle
+(``batched_trsm_panels_ref``); ``interpret`` is auto-detected per
+backend inside the kernel (compiled on TPU, interpreter elsewhere).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels import force_ref
+
+from .kernel import batched_trsm_panels_t
+from .ref import batched_trsm_panels_ref
+
+# Conservative VMEM budget for one program's working set (bytes).
+VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def _vmem_bytes(c: int, p: int, itemsize: int = 4) -> int:
+    return itemsize * (c * c + 2 * c * p)
+
+
+def batched_trsm_panels(l: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Batched forward substitution ``Y[b] = L[b]^{-1} X[b]``.
+
+    The TRSM task of the H-Cholesky schedule (``repro.harith.hlu``):
+    transforms one elimination column's tiles against the freshly
+    factorized diagonal ``L_tt`` (broadcast into the batch by the
+    caller).
+
+    Parameters
+    ----------
+    l : jnp.ndarray, shape (B, c, c)
+        Lower-triangular factors (typically ``L_tt`` broadcast B times).
+    x : jnp.ndarray, shape (B, c, P)
+        Packed panels: V factors of low-rank tiles (P = working rank) or
+        transposed dense tiles (P = c).
+
+    Returns
+    -------
+    y : jnp.ndarray, shape (B, c, P)
+        ``L^{-1} X`` per block.  Oversized panels fall back to the jnp
+        oracle.
+    """
+    c = l.shape[1]
+    p = x.shape[2]
+    if force_ref() or _vmem_bytes(c, p) > VMEM_BUDGET:
+        return batched_trsm_panels_ref(l, x)
+    return batched_trsm_panels_t(l, x)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the batched panel triangular solve."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def batched_trsm_panels_ref(l: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Per-block forward substitution ``Y[b] = L[b]^{-1} X[b]``.
+
+    l: (B, c, c) lower-triangular, x: (B, c, P) panels — the packed V
+    factors of a low-rank tile column (P = working rank) or a transposed
+    dense tile (P = c).
+    """
+    return lax.linalg.triangular_solve(l, x, left_side=True, lower=True)

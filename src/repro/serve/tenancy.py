@@ -116,6 +116,13 @@ class TenantSpec:
         ``device_bytes_budget`` (see ``docs/MEMORY.md``).  NP-mode
         tenants (no precomputed factors) have nothing to spill and
         leave this None.
+    precond_nbytes : int, optional
+        Device bytes pinned by a solver preconditioner baked into the
+        launch closures (``solve_tenant(..., precond="hlu")`` records
+        the H-LU factor footprint here).  Counted against the runtime's
+        ``device_bytes_budget`` for the tenant's whole lifetime: unlike
+        the ``store``, the preconditioner is inlined in the compiled
+        solve and can never be spilled.
     """
 
     n: int
@@ -130,6 +137,7 @@ class TenantSpec:
     shed_above: int | None = None
     build_s: float | None = None
     store: object | None = None
+    precond_nbytes: int = 0
 
     def __post_init__(self):
         if self.weight <= 0:
@@ -208,7 +216,9 @@ def _wire_store(spec_kw: dict, hm, mesh):
 def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
                  max_iter: int = 300, precondition: bool = True,
                  use_pallas: bool = False, mesh=None,
-                 info_log: deque | None = None, **spec_kw) -> TenantSpec:
+                 info_log: deque | None = None,
+                 precond: str | object | None = None,
+                 hlu_opts: dict | None = None, **spec_kw) -> TenantSpec:
     """Spec for a solve-backed tenant (regression-fit traffic).
 
     One fused PCG ``while_loop`` launch per panel (``solve.make_solver``).
@@ -217,6 +227,16 @@ def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
     ``spec_kw``).  Pass ``info_log`` (a bounded ``deque``) to retain the
     per-panel LAZY ``SolveInfo`` records; by default they are dropped
     unread (costs no device sync either way).
+
+    ``precond`` selects the preconditioner exactly as in
+    ``make_solver``: ``"bj"`` / ``"none"`` / ``"hlu"`` / a prebuilt
+    :class:`~repro.harith.precond.HLUPreconditioner` (``None`` defers to
+    the legacy ``precondition`` flag).  For ``"hlu"`` the factorization
+    runs ONCE and is shared by the main and NaN/Inf-fallback solvers;
+    its setup time lands in ``build_s`` (surfaced as ``onboard_s``) and
+    its always-resident device footprint in ``precond_nbytes``, which
+    the runtime charges against ``device_bytes_budget`` alongside the
+    spillable store bytes.
     """
     from repro.parallel.hshard import mesh_device_count, pad_panel_width
     from repro.solve import make_solver
@@ -224,7 +244,8 @@ def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
     n_dev = mesh_device_count(mesh)
     solve = make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
                         precondition=precondition, use_pallas=use_pallas,
-                        mesh=mesh)
+                        mesh=mesh, precond=precond, hlu_opts=hlu_opts)
+    pre = getattr(solve, "preconditioner", None)
 
     def launch(panel):
         c, info = solve(panel)
@@ -232,9 +253,12 @@ def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
             info_log.append(info)                   # lazy: no device sync
         return c
 
+    # fallback shares the SAME factorization (pre is an instance, so the
+    # second make_solver never re-factorizes)
     ref_solve = make_solver(hm, sigma2, tol=tol, max_iter=max_iter,
                             precondition=precondition, use_pallas=False,
-                            mesh=mesh)
+                            mesh=mesh, precond=pre if pre is not None
+                            else precond, hlu_opts=hlu_opts)
 
     def fallback(panel):
         c, _ = ref_solve(panel)                     # degraded path: no info log
@@ -242,6 +266,10 @@ def solve_tenant(hm, sigma2: float, max_batch: int = 8, tol: float = 1e-5,
 
     spec_kw.setdefault("fallback", fallback)
     _wire_store(spec_kw, hm, mesh)
+    if pre is not None:
+        spec_kw.setdefault("precond_nbytes", int(pre.nbytes()))
+        # factorization is onboarding work, same as an on-device build
+        spec_kw["build_s"] = (spec_kw.get("build_s") or 0.0) + pre.setup_seconds
     return TenantSpec(n=hm.shape[0],
                       max_batch=pad_panel_width(max_batch, n_dev),
                       launch=launch, n_dev=n_dev, **spec_kw)
@@ -292,6 +320,7 @@ class _Tenant:
                                                      else "closed"),
                                    "onboard_s": spec.build_s,
                                    "nbytes": self.lane.nbytes(),
+                                   "precond_nbytes": spec.precond_nbytes,
                                    "resident": self.resident,
                                    "spills": 0, "reloads": 0,
                                    "reload_s": None,
@@ -487,10 +516,14 @@ class MultiTenantRuntime:
                 # onboarding latency rollup: tenants built from raw
                 # coordinates report their construction wall time
                 self.stats["onboard_s"][name] = float(spec.build_s)
-            if tenant.resident:
-                # memory tier: account the new store, then spill LRU cold
-                # tenants until the device-bytes budget holds again
-                self._resident_bytes += tenant.stats["nbytes"]
+            if tenant.resident or spec.precond_nbytes:
+                # memory tier: account the new store plus any pinned
+                # preconditioner bytes, then spill LRU cold tenants until
+                # the device-bytes budget holds again (preconditioner
+                # bytes are unspillable, so only stores can be victims)
+                if tenant.resident:
+                    self._resident_bytes += tenant.stats["nbytes"]
+                self._resident_bytes += spec.precond_nbytes
                 self.stats["device_store_bytes"] = self._resident_bytes
                 self._enforce_budget_locked(exempt=tenant)
             self._cv.notify_all()
@@ -532,7 +565,10 @@ class MultiTenantRuntime:
                 tenant.resident = False
                 tenant.stats["resident"] = False
                 self._resident_bytes -= tenant.stats["nbytes"]
-                self.stats["device_store_bytes"] = self._resident_bytes
+            # pinned preconditioner bytes are released with the tenant
+            # (they were never spillable, so no resident flag to clear)
+            self._resident_bytes -= tenant.spec.precond_nbytes
+            self.stats["device_store_bytes"] = self._resident_bytes
             self._cv.notify_all()                   # wake backpressured submits
 
     def tenants(self) -> tuple:

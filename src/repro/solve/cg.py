@@ -57,6 +57,8 @@ import numpy as np
 
 from repro.core.clustering import permute_from_tree, permute_to_tree
 from repro.core.hmatrix import HMatrix, apply_in_tree_order, diagonal_blocks
+from repro.harith.hlu import HLUFactors, hlu_solve_panels
+from repro.harith.precond import HLUPreconditioner, make_hlu_preconditioner
 
 
 class SolveInfo:
@@ -249,6 +251,11 @@ def pcg_tree_ordered(tree, plan, kernel, k: int, use_pallas: bool,
     def prec(r):
         if chol_arg is None:
             return r
+        if isinstance(chol_arg, HLUFactors):
+            # approximate H-Cholesky: two block-substitution sweeps over
+            # the factor tiles, inlined in the while_loop like the
+            # block-Jacobi solves below (repro.harith.hlu)
+            return _mask(hlu_solve_panels(chol_arg, r))
         rb = r.reshape(n_leaf, c, r_width)
         if use_pallas:
             from repro.kernels.batched_block_solve.ops import (
@@ -296,7 +303,9 @@ def pcg_tree_ordered(tree, plan, kernel, k: int, use_pallas: bool,
 
 def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
                 max_iter: int = 300, precondition: bool = True,
-                use_pallas: bool = False, mesh=None, axis=None) -> Callable:
+                use_pallas: bool = False, mesh=None, axis=None,
+                precond: str | HLUPreconditioner | None = None,
+                hlu_opts: dict | None = None) -> Callable:
     """Build the fused solver for ``(A + sigma2 I) C = F``.
 
     Parameters
@@ -311,9 +320,8 @@ def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
     max_iter : int, optional
         Iteration cap for the ``while_loop``.
     precondition : bool, optional
-        Apply block-Jacobi preconditioning from the inadmissible diagonal
-        leaf blocks (factorized once at setup, see
-        :func:`build_preconditioner`).
+        Legacy on/off switch for block-Jacobi preconditioning; ignored
+        when ``precond`` is given.
     use_pallas : bool, optional
         Route the hot loops (H-apply + block solves) through the Pallas
         kernels.
@@ -325,6 +333,20 @@ def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
     axis : str | tuple, optional
         Mesh axis (or axes) to shard over; default all axes of ``mesh``.
         Ignored without ``mesh``.
+    precond : {"bj", "hlu", "none"} | HLUPreconditioner, optional
+        Preconditioner selection.  ``"bj"`` is the block-Jacobi default;
+        ``"hlu"`` factorizes an approximate H-Cholesky once at setup
+        (``repro.harith``) and inlines its forward/back H-solve in the
+        fused while_loop — near-constant iteration counts on
+        ill-conditioned systems.  A prebuilt
+        :class:`repro.harith.precond.HLUPreconditioner` is used as-is
+        (this is how serving shares ONE factorization across the main
+        and fallback solvers).  The chosen preconditioner is exposed as
+        ``solve.preconditioner``.
+    hlu_opts : dict, optional
+        Keyword arguments for
+        :func:`repro.harith.precond.make_hlu_preconditioner` (``tol``,
+        ``kp``) when ``precond="hlu"`` builds the factorization here.
 
     Returns
     -------
@@ -337,17 +359,39 @@ def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
         syncs until they are read (``np.asarray(C)`` / an info attribute /
         ``info.fetch()``), so launches can overlap.
     """
+    pre = None
+    if isinstance(precond, HLUPreconditioner):
+        pre, precond = precond, "hlu"
+    elif precond is None:
+        precond = "bj" if precondition else "none"
+    if precond not in ("bj", "hlu", "none"):
+        raise ValueError(f"unknown precond {precond!r}; expected 'bj', "
+                         "'hlu', 'none', or an HLUPreconditioner")
     if mesh is not None:
+        if precond == "hlu":
+            raise ValueError(
+                "precond='hlu' is single-device: the H-LU substitution "
+                "sweeps are sequential across block rows, which defeats "
+                "the mesh-sharded solver's column parallelism — shard "
+                "RHS columns over tenants instead, or use precond='bj'")
         from repro.parallel.hshard import make_sharded_solver
         return make_sharded_solver(hm, sigma2, mesh, axis=axis, tol=tol,
                                    max_iter=max_iter,
-                                   precondition=precondition,
+                                   precondition=precond == "bj",
                                    use_pallas=use_pallas)
 
     tree, plan, kernel, k = hm.tree, hm.plan, hm.kernel, hm.k
     n = tree.n
     tol2 = float(tol) * float(tol)
-    chol = build_preconditioner(hm, sigma2, use_pallas) if precondition else None
+    if precond == "hlu":
+        if pre is None:
+            pre = make_hlu_preconditioner(hm, sigma2, use_pallas=use_pallas,
+                                          **(hlu_opts or {}))
+        chol = pre.factors
+    elif precond == "bj":
+        chol = build_preconditioner(hm, sigma2, use_pallas)
+    else:
+        chol = None
 
     @jax.jit
     def _solve(points, factors, chol_arg, b):
@@ -368,4 +412,5 @@ def make_solver(hm: HMatrix, sigma2: float, tol: float = 1e-5,
         info = SolveInfo(it, iters_col, res, tol)
         return (x[:, 0] if f.ndim == 1 else x), info
 
+    solve.preconditioner = pre
     return solve

@@ -117,7 +117,8 @@ def test_preconditioner_reduces_iterations(rng):
 
 def test_diagonal_blocks_match_dense(rng):
     """diagonal_blocks == the (i, i) leaf blocks of the tree-ordered dense
-    matrix."""
+    matrix on the real rows; pad rows/cols are zeroed with a unit diagonal
+    (decoupled identity rows, SPD for any shift)."""
     n = 600
     pts = halton(n, 2)
     hm = build_hmatrix(pts, "gaussian", k=8, c_leaf=128)
@@ -125,11 +126,38 @@ def test_diagonal_blocks_match_dense(rng):
     a_tree = hm.kernel(hm.tree.points, hm.tree.points)
     c = hm.plan.c_leaf
     assert blocks.shape == (hm.plan.n_pad // c, c, c)
+    valid = np.arange(hm.plan.n_pad) < n
     for i in [0, 1, blocks.shape[0] - 1]:
-        np.testing.assert_allclose(
-            np.asarray(blocks[i]),
-            np.asarray(a_tree[i * c:(i + 1) * c, i * c:(i + 1) * c]),
-            rtol=1e-6, atol=1e-6)
+        want = np.asarray(a_tree[i * c:(i + 1) * c, i * c:(i + 1) * c]).copy()
+        v = valid[i * c:(i + 1) * c]
+        want[~v, :] = 0.0
+        want[:, ~v] = 0.0
+        want[~v, ~v] = 1.0
+        np.testing.assert_allclose(np.asarray(blocks[i]), want,
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_diagonal_blocks_ragged_last_leaf_spd(rng):
+    """Regression: a ragged last leaf (n < n_pad) used to keep kernel
+    values in the pad rows/cols of the final diagonal block, making the
+    shifted block ill-posed for Cholesky-based preconditioning.  Masked
+    pad rows carry exactly a unit diagonal, so every block stays SPD and
+    the block-Jacobi solve is unaffected on the real rows."""
+    n = 600                                  # 600 = 4*128 + 88: ragged tail
+    pts = halton(n, 2)
+    hm = build_hmatrix(pts, "gaussian", k=8, c_leaf=128)
+    blocks = np.asarray(diagonal_blocks(hm))
+    last = blocks[-1]
+    tail = n % hm.plan.c_leaf
+    assert tail != 0                         # the case under test
+    np.testing.assert_array_equal(last[tail:, :tail], 0.0)
+    np.testing.assert_array_equal(last[:tail, tail:], 0.0)
+    np.testing.assert_array_equal(last[tail:, tail:],
+                                  np.eye(hm.plan.c_leaf - tail,
+                                         dtype=last.dtype))
+    for b in blocks:                         # SPD under the usual shift
+        np.linalg.cholesky(b.astype(np.float64)
+                           + 1e-2 * np.eye(b.shape[0]))
 
 
 @pytest.mark.parametrize("b,c", [(1, 128), (3, 128), (2, 256)])
